@@ -1,0 +1,114 @@
+"""Shared miniature-training harness for the PointMLP benchmark tables.
+
+ModelNet40 does not ship in the container; the synthetic parametric-shape
+benchmark (8 classes) stands in.  Configs are scaled down (128-512 points,
+embed 16) so the full Table-1 ladder trains on one CPU in minutes; the
+claim under test is the *relative* accuracy ordering across compression
+variants, not absolute ModelNet40 numbers (EXPERIMENTS.md §Paper).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sampling
+from repro.data import pointclouds
+from repro.models import pointmlp as PM
+from repro.models.layers import softmax_cross_entropy
+
+
+def scale_down(cfg: PM.PointMLPConfig) -> PM.PointMLPConfig:
+    return cfg.replace(n_classes=pointclouds.N_CLASSES,
+                       n_points=max(64, cfg.n_points // 4),
+                       embed_dim=16, k_neighbors=8)
+
+
+def train_eval(cfg: PM.PointMLPConfig, steps: int = 150, batch: int = 16,
+               lr: float = 0.02, seed: int = 0,
+               init_params=None) -> Tuple[Dict, float, float]:
+    """Train `steps` and return (params, overall acc, mean-class acc)."""
+    params = init_params or PM.pointmlp_init(jax.random.PRNGKey(seed), cfg)
+    lfsr = sampling.seed_streams(seed, max(batch, 64))
+
+    def loss_fn(p, pts, cls, lf):
+        logits, p_new, lf = PM.pointmlp_apply(p, cfg, pts, lf, train=True)
+        return softmax_cross_entropy(logits, cls), (p_new, lf)
+
+    @jax.jit
+    def step(p, pts, cls, lf, lr_now):
+        (l, (p_new, lf)), g = jax.value_and_grad(loss_fn, has_aux=True)(
+            p, pts, cls, lf)
+        # SGD + momentum-free (short runs); BN stats come from p_new
+        p2 = jax.tree_util.tree_map(lambda a, b: a - lr_now * b, p, g)
+        p2 = _merge_bn(p2, p_new)
+        return l, p2, lf
+
+    for s in range(steps):
+        pts, cls = pointclouds.make_batch(
+            jax.random.fold_in(jax.random.PRNGKey(seed), s),
+            cfg.n_points, batch)
+        lr_now = lr * (0.5 * (1 + jnp.cos(jnp.pi * s / steps)))
+        _, params, lfsr = step(params, pts, cls, lfsr, lr_now)
+
+    oa, ma = evaluate(params, cfg, seed)
+    return params, oa, ma
+
+
+def evaluate(params, cfg: PM.PointMLPConfig, seed: int = 0,
+             n_batches: int = 8, batch: int = 32) -> Tuple[float, float]:
+    lfsr = sampling.seed_streams(seed + 1, max(batch, 64))
+    correct = jnp.zeros((), jnp.int32)
+    per_class_hit = jnp.zeros((pointclouds.N_CLASSES,))
+    per_class_tot = jnp.zeros((pointclouds.N_CLASSES,))
+
+    @jax.jit
+    def infer(p, pts, lf):
+        logits, _, lf = PM.pointmlp_apply(p, cfg, pts, lf, train=False)
+        return jnp.argmax(logits, -1), lf
+
+    for pts, cls in pointclouds.eval_set(seed, cfg.n_points, n_batches,
+                                         batch):
+        pred, lfsr = infer(params, pts, lfsr)
+        correct += jnp.sum(pred == cls)
+        per_class_hit = per_class_hit.at[cls].add(pred == cls)
+        per_class_tot = per_class_tot.at[cls].add(1.0)
+    oa = float(correct) / (n_batches * batch)
+    ma = float(jnp.mean(per_class_hit / jnp.maximum(per_class_tot, 1)))
+    return oa, ma
+
+
+def _merge_bn(p_sgd, p_stats):
+    """Take SGD-updated weights but BN running stats from the forward."""
+    def merge(a, b, path=""):
+        if isinstance(a, dict):
+            return {k: (b[k] if k == "bn" else merge(a[k], b[k]))
+                    for k in a}
+        if isinstance(a, list):
+            return [merge(x, y) for x, y in zip(a, b)]
+        return a
+    return merge(p_sgd, p_stats)
+
+
+def measured_sps(params, cfg: PM.PointMLPConfig, batch: int = 8,
+                 iters: int = 10) -> float:
+    """CPU samples/sec (jitted steady-state) — Table 3's CPU row."""
+    lfsr = sampling.seed_streams(0, max(batch, 64))
+    pts, _ = pointclouds.make_batch(jax.random.PRNGKey(0), cfg.n_points,
+                                    batch)
+
+    @jax.jit
+    def infer(p, pts, lf):
+        logits, _, lf = PM.pointmlp_apply(p, cfg, pts, lf, train=False)
+        return logits, lf
+
+    logits, lfsr = infer(params, pts, lfsr)      # compile
+    logits.block_until_ready()
+    t0 = time.time()
+    for _ in range(iters):
+        logits, lfsr = infer(params, pts, lfsr)
+    logits.block_until_ready()
+    return batch * iters / (time.time() - t0)

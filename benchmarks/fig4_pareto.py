@@ -1,0 +1,53 @@
+"""Fig. 4: OA vs model size Pareto across W/A precisions (QAT sweep).
+
+Each precision point fine-tunes from a shared fp32 M-2 parent (short QAT)
+and reports (size bytes after int8/fp export, OA) — the 8/8 point should
+sit on the Pareto frontier, the paper's central quantization claim.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.core import compress as CP
+from repro.core import quant as Q
+from repro.models import pointmlp as PM
+
+from benchmarks._pointmlp_train import scale_down, train_eval, evaluate
+
+
+def run(parent_steps: int = 150, qat_steps: int = 60,
+        out: str = "artifacts/bench") -> list:
+    m2 = scale_down(PM.pointmlp_m2_config())
+    parent, parent_oa, _ = train_eval(m2, steps=parent_steps)
+    rows = []
+    for cfg in CP.precision_sweep():
+        cfg = scale_down(cfg)
+        if cfg.quant.enabled:
+            _, oa, ma = train_eval(cfg, steps=qat_steps,
+                                   init_params=parent, lr=0.005)
+            params = parent
+        else:
+            oa, ma = parent_oa, 0.0
+            params = parent
+        # deployed size: fused + exported at the weight precision
+        deploy, dcfg, report = CP.compress(params, cfg)
+        w_bytes = report.size_bytes if cfg.quant.w_bits <= 8 else \
+            int(report.size_bytes * cfg.quant.w_bits / 32)
+        rows.append({"precision": f"{cfg.quant.w_bits}/{cfg.quant.a_bits}",
+                     "size_bytes": w_bytes, "oa": round(oa, 4)})
+        print(f"fig4: {rows[-1]}", flush=True)
+    # Pareto check: is 8/8 dominated?
+    p88 = next(r for r in rows if r["precision"] == "8/8")
+    dominated = any(r["size_bytes"] <= p88["size_bytes"] and
+                    r["oa"] > p88["oa"] + 0.02 for r in rows
+                    if r is not p88)
+    result = {"rows": rows, "pareto_8_8": not dominated}
+    p = pathlib.Path(out)
+    p.mkdir(parents=True, exist_ok=True)
+    (p / "fig4.json").write_text(json.dumps(result, indent=1))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

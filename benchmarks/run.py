@@ -1,0 +1,103 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Heavier rows (Table 1 /
+Fig. 4 miniature training) run by default; ``--quick`` skips them.
+Roofline rows are summarized from the dry-run artifacts when present
+(run ``python -m repro.launch.dryrun`` first).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+
+def _emit(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def bench_kernels() -> None:
+    from benchmarks import kernels_micro
+    for name, us, derived in kernels_micro.rows():
+        _emit(name, us, derived.replace(",", ";"))
+
+
+def bench_table1(steps: int) -> None:
+    from benchmarks import table1_compression
+    t0 = time.time()
+    rows = table1_compression.run(steps=steps)
+    elite = next(r for r in rows if r["model"] == "pointmlp-elite")
+    m2 = next(r for r in rows if r["model"] == "M-2")
+    _emit("table1_compression_ladder", (time.time() - t0) * 1e6,
+          f"elite_oa={elite['oa']};m2_oa={m2['oa']};"
+          f"drop={elite['oa']-m2['oa']:.3f}")
+
+
+def bench_fig4(parent_steps: int, qat_steps: int) -> None:
+    from benchmarks import fig4_pareto
+    t0 = time.time()
+    rows = fig4_pareto.run(parent_steps=parent_steps, qat_steps=qat_steps)
+    p88 = next(r for r in rows if r["precision"] == "8/8")
+    _emit("fig4_pareto_8_8", (time.time() - t0) * 1e6,
+          f"oa={p88['oa']};size={p88['size_bytes']}")
+
+
+def bench_table2() -> None:
+    from benchmarks import table2_throughput
+    t0 = time.time()
+    rows = table2_throughput.run()
+    r = rows["tpu_v5e_lite_int8"]
+    _emit("table2_tpu_lite_int8", (time.time() - t0) * 1e6,
+          f"GOPS={r['derived_GOPS']};SPS={r['derived_SPS']};"
+          f"bound={r['bound']}")
+
+
+def bench_table3() -> None:
+    from benchmarks import table3_platforms
+    t0 = time.time()
+    rows = table3_platforms.run()
+    _emit("table3_platforms", (time.time() - t0) * 1e6,
+          f"cpu_lite_sps={rows['cpu_lite_int8_sps']};"
+          f"cpu_elite_sps={rows['cpu_elite_fp32_sps']};"
+          f"tpu_lite_sps={rows['tpu_v5e_lite_derived_sps']}")
+
+
+def bench_roofline_summary(dryrun_dir: str = "artifacts/dryrun/pod") -> None:
+    d = pathlib.Path(dryrun_dir)
+    if not d.exists():
+        _emit("roofline_summary", 0.0, "no dryrun artifacts (run "
+              "python -m repro.launch.dryrun)")
+        return
+    for f in sorted(d.glob("*/*.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("status") != "ok" or "roofline" not in rec:
+            continue
+        r = rec["roofline"]
+        t_bound = max(r["t_compute"], r["t_memory"], r["t_collective"])
+        frac = rec.get("roofline_fraction")
+        _emit(f"dryrun_{rec['arch']}_{rec['shape']}", t_bound * 1e6,
+              f"bound={r['bottleneck']};frac={frac:.4f}"
+              if frac else f"bound={r['bottleneck']}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="skip the training-based tables")
+    ap.add_argument("--table1-steps", type=int, default=120)
+    ap.add_argument("--fig4-steps", type=int, default=100)
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    bench_kernels()
+    bench_table2()
+    bench_table3()
+    if not args.quick:
+        bench_table1(args.table1_steps)
+        bench_fig4(args.fig4_steps, max(30, args.fig4_steps // 2))
+    bench_roofline_summary()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Table 3: cross-platform throughput (SPS) — Elite vs Lite.
+
+Measured rows: this host's CPU (jitted JAX, fp32 Elite vs int8-deployed
+Lite) — the paper's 22x CPU-vs-FPGA gap analogue.  Derived rows: TPU v5e
+roofline SPS from table2's model.  Paper rows quoted for reference.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.core import compress as CP
+from repro.models import pointmlp as PM
+
+from benchmarks._pointmlp_train import scale_down, measured_sps
+from benchmarks.table2_throughput import derived_tpu_row
+
+PAPER_ROWS = [
+    {"model": "PointMLP-Elite", "platform": "Tesla V-100", "sps": 176},
+    {"model": "PointMLP-Elite", "platform": "RTX 3060 Ti", "sps": 187},
+    {"model": "PointMLP-Lite", "platform": "RTX 3060 Ti", "sps": 421},
+    {"model": "PointMLP-Lite", "platform": "Intel i5-13400", "sps": 45},
+    {"model": "PointMLP-Lite", "platform": "Xilinx ZC706", "sps": 990},
+]
+
+
+def run(out: str = "artifacts/bench") -> dict:
+    import jax
+    elite = scale_down(PM.pointmlp_elite_config())
+    lite = scale_down(PM.pointmlp_lite_config())
+    pe = PM.pointmlp_init(jax.random.PRNGKey(0), elite)
+    pl = PM.pointmlp_init(jax.random.PRNGKey(0), lite)
+    pl_deploy, lite_deploy_cfg, _ = CP.compress(pl, lite)
+    rows = {
+        "cpu_elite_fp32_sps": round(measured_sps(pe, elite), 1),
+        "cpu_lite_int8_sps": round(measured_sps(pl_deploy,
+                                                lite_deploy_cfg), 1),
+        "tpu_v5e_lite_derived_sps":
+            derived_tpu_row(PM.pointmlp_lite_config())["derived_SPS"],
+        "tpu_v5e_elite_derived_sps":
+            derived_tpu_row(PM.pointmlp_elite_config())["derived_SPS"],
+        "paper_rows": PAPER_ROWS,
+        "note": "CPU rows measured on reduced configs (see _pointmlp_train"
+                ".scale_down); TPU rows are roofline-derived for the full "
+                "published configs.",
+    }
+    rows["lite_vs_elite_cpu_speedup"] = round(
+        rows["cpu_lite_int8_sps"] / max(rows["cpu_elite_fp32_sps"], 1e-9), 2)
+    rows["tpu_vs_paper_fpga_speedup"] = round(
+        rows["tpu_v5e_lite_derived_sps"] / 990.0, 2)
+    p = pathlib.Path(out)
+    p.mkdir(parents=True, exist_ok=True)
+    (p / "table3.json").write_text(json.dumps(rows, indent=1))
+    print(f"table3: CPU elite {rows['cpu_elite_fp32_sps']} SPS, "
+          f"CPU lite {rows['cpu_lite_int8_sps']} SPS "
+          f"({rows['lite_vs_elite_cpu_speedup']}x), "
+          f"TPU lite derived {rows['tpu_v5e_lite_derived_sps']} SPS",
+          flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,122 @@
+"""Config system: architecture + shape + parallelism parametrization.
+
+The HLS4PC analogue: every model is described by a compile-time
+parameter set (precision, per-layer parallelism, topology) from which the
+framework generates the deployable artifact.  Here the artifact is a
+lowered+compiled XLA SPMD program instead of a bitstream.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+from repro.core.quant import QuantConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One architecture. Families: dense | moe | encdec | ssm | hybrid |
+    vlm | audio | pointcloud (the paper's own model)."""
+    name: str
+    family: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // n_heads
+    # --- MoE ---
+    n_experts: int = 0
+    experts_per_token: int = 0
+    capacity_factor: float = 1.25
+    # --- encoder-decoder (whisper) ---
+    n_enc_layers: int = 0
+    enc_seq: int = 0                 # encoder frames (stub frontend length)
+    # --- SSM / hybrid ---
+    ssm_state: int = 0
+    conv_width: int = 4              # mamba short conv
+    slstm_every: int = 0             # xLSTM: one sLSTM block every k layers
+    # --- attention ---
+    sliding_window: int = 0          # 0 = full attention
+    rope_theta: float = 10000.0
+    # --- frontend stubs ([audio]/[vlm]) ---
+    frontend: str = "none"           # none | audio_stub | patch_stub
+    # --- numerics / training ---
+    dtype: str = "bfloat16"
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    remat: bool = True
+    # unroll layer scans at lowering time (dry-run: XLA cost_analysis does
+    # not multiply while-loop bodies by trip count, so the roofline pass
+    # lowers with straight-line layers; runtime keeps the compact scan)
+    unroll_layers: bool = False
+    quant: QuantConfig = QuantConfig(w_bits=32, a_bits=32)
+    # --- per-layer parallelism overrides (sharding rule name) ---
+    sharding_profile: str = "default"
+    # attention implementation: xla (dense) | xla_chunked (online-softmax
+    # scan, no [T,S] materialization) | flash (Pallas kernel, TPU runtime)
+    attn_impl: str = "xla"
+    # sequence-parallel residual stream (shard seq dim over `model`
+    # between blocks -> all-reduce becomes reduce-scatter/all-gather)
+    seq_parallel: bool = False
+
+    @property
+    def kv_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """Eligible for long_500k (recurrent state or sliding window)."""
+        return self.family in ("ssm", "hybrid") or self.sliding_window > 0
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One input-shape cell. kind: train | prefill | decode."""
+    name: str
+    kind: str
+    seq_len: int
+    global_batch: int
+
+
+LM_SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524288, 1),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    """Paper recipe defaults (§3): SGD momentum=0.8, wd=2e-4, cosine LR
+    0.1 -> 0.005, batch 256, (1000 epochs full-scale)."""
+    optimizer: str = "sgd"
+    lr: float = 0.1
+    lr_min: float = 0.005
+    momentum: float = 0.8
+    weight_decay: float = 0.0002
+    steps: int = 1000
+    batch_size: int = 256
+    microbatch: int = 0              # 0 = no grad accumulation
+    seed: int = 0
+    grad_compress_bits: int = 0      # 0=off, 8=int8 all-reduce
+    checkpoint_every: int = 100
+    checkpoint_dir: str = "checkpoints"
+
+
+def shape_for(cfg: ModelConfig, shape_name: str) -> ShapeConfig:
+    return LM_SHAPES[shape_name]
+
+
+def cell_is_runnable(cfg: ModelConfig, shape: ShapeConfig
+                     ) -> Tuple[bool, Optional[str]]:
+    """Whether an (arch x shape) cell runs, else the documented skip."""
+    if shape.name == "long_500k" and not cfg.is_subquadratic:
+        return False, ("full-attention arch: 500k dense decode skipped per "
+                       "assignment; see DESIGN.md §Arch-applicability")
+    return True, None

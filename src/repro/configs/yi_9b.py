@@ -1,0 +1,15 @@
+"""yi-9b [dense] — llama-arch GQA. [arXiv:2403.04652; hf]"""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="yi-9b", family="dense",
+        n_layers=48, d_model=4096, n_heads=32, n_kv_heads=4,
+        d_ff=11008, vocab_size=64000)
+
+
+def smoke_config() -> ModelConfig:
+    return config().replace(n_layers=2, d_model=64, n_heads=4,
+                            n_kv_heads=2, d_ff=128, vocab_size=512,
+                            remat=False)

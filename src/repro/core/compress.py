@@ -1,0 +1,81 @@
+"""The HLS4PC compression pipeline (Fig. 1 + Table 1 + Fig. 4).
+
+``compression_ladder()`` enumerates the paper's variants:
+  Elite (FPS, affine, BN, fp32, 1024 pts)
+  M-1  (URS, pruned alpha/beta, BN-fused, 1024)
+  M-2  (...512)   M-3 (...256)   M-4 (...128)
+  Lite = M-2 + 8/8 QAT  (the Pareto point of Fig. 4)
+
+``compress()`` runs the deploy-side transform the FPGA flow performs
+after QAT: BN fusion -> int8 export -> (optional) Pallas-kernel backend.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Tuple
+
+import jax
+
+from repro.core import fusion as F
+from repro.core import quant as Q
+from repro.models.pointmlp import (PointMLPConfig, pointmlp_elite_config,
+                                   pointmlp_lite_config, pointmlp_m2_config)
+
+
+def compression_ladder(n_classes: int = 40) -> List[PointMLPConfig]:
+    elite = pointmlp_elite_config(n_classes)
+    base = elite.replace(sampler="urs", affine_mode="norm")
+    return [
+        elite,
+        base.replace(name="M-1", n_points=1024),
+        base.replace(name="M-2", n_points=512),
+        base.replace(name="M-3", n_points=256),
+        base.replace(name="M-4", n_points=128),
+        pointmlp_lite_config(n_classes),
+    ]
+
+
+def precision_sweep(n_classes: int = 40) -> List[PointMLPConfig]:
+    """Fig. 4's Pareto sweep: W/A bits over the M-2 topology."""
+    m2 = pointmlp_m2_config(n_classes)
+    out = []
+    for wb, ab in [(32, 32), (16, 16), (8, 8), (6, 6), (4, 4), (8, 16),
+                   (4, 8)]:
+        out.append(m2.replace(
+            name=f"M-2-w{wb}a{ab}",
+            quant=Q.QuantConfig(w_bits=wb, a_bits=ab)))
+    return out
+
+
+@dataclasses.dataclass
+class CompressionReport:
+    name: str
+    size_bytes: int
+    size_ratio_vs_f32: float
+    bn_blocks_fused: int
+
+
+def compress(params: Any, cfg: PointMLPConfig,
+             backend: str = "int8_ref") -> Tuple[Any, PointMLPConfig,
+                                                 CompressionReport]:
+    """Deploy-side transform: fuse BN exactly, then export int8 weights.
+
+    Returns (deploy params, deploy config, report).  The deploy config has
+    ``use_bn=False`` (fused) and a quant config whose backend selects the
+    reference or Pallas int8 matmul at apply time."""
+    f32_size = Q.tree_size_bytes(params)
+    n_bn = F.count_bn_blocks(params)
+    fused = F.fuse_tree(params)
+    qcfg = dataclasses.replace(cfg.quant, backend=backend) \
+        if cfg.quant.enabled else cfg.quant
+    if cfg.quant.enabled and cfg.quant.w_bits <= 8:
+        deploy = Q.quantize_tree(fused, qcfg)
+    else:
+        deploy = fused
+    deploy_cfg = cfg.replace(use_bn=False, quant=qcfg)
+    report = CompressionReport(
+        name=cfg.name,
+        size_bytes=Q.tree_size_bytes(deploy),
+        size_ratio_vs_f32=f32_size / max(Q.tree_size_bytes(deploy), 1),
+        bn_blocks_fused=n_bn)
+    return deploy, deploy_cfg, report

@@ -1,0 +1,91 @@
+"""Layer fusion: batch-norm folded into the preceding conv/linear (HLS4PC §2.2).
+
+On the FPGA this eliminates BRAM for BN parameters; on TPU it eliminates
+an HBM round-trip and a VPU pass per layer.  The fold is exact algebra:
+
+    y = gamma * (w x + b - mu) / sqrt(var + eps) + beta
+      = (gamma / sqrt(var+eps)) * w x + (gamma (b - mu) / sqrt(var+eps) + beta)
+
+so  w' = w * g,  b' = (b - mu) * g + beta  with  g = gamma / sqrt(var+eps).
+
+Performed *after* quantization-aware training, exactly as the paper does,
+and the fused parameters are what the int8 export consumes.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def batchnorm_init(channels: int) -> Dict[str, jnp.ndarray]:
+    return {
+        "gamma": jnp.ones((channels,), jnp.float32),
+        "beta": jnp.zeros((channels,), jnp.float32),
+        "mean": jnp.zeros((channels,), jnp.float32),
+        "var": jnp.ones((channels,), jnp.float32),
+    }
+
+
+def batchnorm_apply(x: jnp.ndarray, bn: Dict[str, jnp.ndarray],
+                    eps: float = 1e-5) -> jnp.ndarray:
+    """Inference-mode BN over the last (channel) axis."""
+    inv = jax.lax.rsqrt(bn["var"] + eps)
+    return (x - bn["mean"]) * inv * bn["gamma"] + bn["beta"]
+
+
+def batchnorm_update_stats(bn: Dict[str, jnp.ndarray], x: jnp.ndarray,
+                           momentum: float = 0.9) -> Dict[str, jnp.ndarray]:
+    """EMA running-stat update (training mode). x: [..., C]."""
+    red = tuple(range(x.ndim - 1))
+    mu = jnp.mean(x, axis=red)
+    var = jnp.var(x, axis=red)
+    return {
+        "gamma": bn["gamma"], "beta": bn["beta"],
+        "mean": momentum * bn["mean"] + (1 - momentum) * mu,
+        "var": momentum * bn["var"] + (1 - momentum) * var,
+    }
+
+
+def fuse_conv_bn(w: jnp.ndarray, b: jnp.ndarray, bn: Dict[str, jnp.ndarray],
+                 eps: float = 1e-5):
+    """Fold BN into a pointwise conv / linear with weight [..., C_out].
+
+    Returns (w', b') such that  w' x + b'  ==  BN(w x + b)  exactly.
+    """
+    g = bn["gamma"] * jax.lax.rsqrt(bn["var"] + eps)
+    w_f = w * g  # broadcast over the trailing out-channel axis
+    b_f = (b - bn["mean"]) * g + bn["beta"]
+    return w_f, b_f
+
+
+def fuse_tree(params: Any, eps: float = 1e-5) -> Any:
+    """Recursively fuse every ``{"w","b","bn"}`` block in a param tree.
+
+    A *fusable block* is any dict containing keys ``w``, ``b`` and ``bn``
+    (our Conv1d/Linear-with-BN layout, see ``repro.models.layers``).  The
+    result drops the ``bn`` entry — the BRAM-elimination analogue.
+    """
+    if isinstance(params, dict):
+        if {"w", "b", "bn"} <= set(params.keys()):
+            w_f, b_f = fuse_conv_bn(params["w"], params["b"], params["bn"], eps)
+            rest = {k: fuse_tree(v, eps) for k, v in params.items()
+                    if k not in ("w", "b", "bn")}
+            return {"w": w_f, "b": b_f, **rest}
+        return {k: fuse_tree(v, eps) for k, v in params.items()}
+    if isinstance(params, (list, tuple)):
+        return type(params)(fuse_tree(v, eps) for v in params)
+    return params
+
+
+def count_bn_blocks(params: Any) -> int:
+    n = 0
+    if isinstance(params, dict):
+        if {"w", "b", "bn"} <= set(params.keys()):
+            n += 1
+        for v in params.values():
+            n += count_bn_blocks(v) if isinstance(v, (dict, list, tuple)) else 0
+    elif isinstance(params, (list, tuple)):
+        n += sum(count_bn_blocks(v) for v in params)
+    return n

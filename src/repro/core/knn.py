@@ -1,0 +1,128 @@
+"""KNN grouping + geometric affine (HLS4PC §2.1, Fig. 2; PointMLP grouper).
+
+The paper's KNN engine: parallel *distance PEs* compute the distance from
+each sample to every input point into a *distance buffer*; a
+selection-sort-style module then extracts the k nearest by repeatedly
+taking the argmin and overwriting the selected entry with the numeric
+maximum of the fixed-point representation.
+
+TPU adaptation (see DESIGN.md §2): distances come from an MXU-friendly
+expansion ‖s−p‖² = ‖s‖² − 2 s·p + ‖p‖², and the selection trick is kept
+verbatim (branch-free, vectorized over all samples).  The tiled Pallas
+version lives in ``repro.kernels.knn``; this module is the composable
+reference used by models and oracles.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_sqdist(samples: jnp.ndarray, points: jnp.ndarray) -> jnp.ndarray:
+    """[S, C], [N, C] -> [S, N] squared euclidean distances (MXU form)."""
+    s2 = jnp.sum(samples * samples, axis=-1, keepdims=True)        # [S, 1]
+    p2 = jnp.sum(points * points, axis=-1)[None, :]                # [1, N]
+    cross = samples @ points.T                                     # [S, N] (MXU)
+    return s2 - 2.0 * cross + p2
+
+
+def knn_select(dist: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Paper-faithful k-min extraction: k × (argmin, overwrite with +max).
+
+    dist: [S, N] -> indices [S, k] in ascending-distance order.
+    """
+    big = jnp.asarray(jnp.finfo(dist.dtype).max, dist.dtype)
+
+    def body(d, _):
+        j = jnp.argmin(d, axis=-1)                                  # [S]
+        d = d.at[jnp.arange(d.shape[0]), j].set(big)
+        return d, j.astype(jnp.int32)
+
+    _, idx = jax.lax.scan(body, dist, None, length=k)               # [k, S]
+    return idx.T
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def knn(samples: jnp.ndarray, points: jnp.ndarray, k: int) -> jnp.ndarray:
+    """[S, C], [N, C] -> [S, k] nearest-neighbor indices."""
+    return knn_select(pairwise_sqdist(samples, points), k)
+
+
+def knn_batched(samples: jnp.ndarray, points: jnp.ndarray, k: int
+                ) -> jnp.ndarray:
+    """[B, S, C], [B, N, C] -> [B, S, k]."""
+    return jax.vmap(lambda s, p: knn(s, p, k))(samples, points)
+
+
+def gather_neighbors(feats: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """feats [B, N, C], idx [B, S, k] -> [B, S, k, C]."""
+    b, s, k = idx.shape
+    flat = idx.reshape(b, s * k)
+    out = jnp.take_along_axis(feats, flat[..., None], axis=1)
+    return out.reshape(b, s, k, feats.shape[-1])
+
+
+# ------------------------------------------------ geometric affine -------
+
+def geometric_affine_init(channels: int) -> dict:
+    """PointMLP's learnable affine (alpha, beta) over grouped features."""
+    return {
+        "alpha": jnp.ones((channels,), jnp.float32),
+        "beta": jnp.zeros((channels,), jnp.float32),
+    }
+
+
+def normalize_group(grouped: jnp.ndarray, centers: jnp.ndarray,
+                    params: Optional[dict], mode: str = "affine",
+                    eps: float = 1e-5) -> jnp.ndarray:
+    """Normalize grouped neighborhoods to a stable local representation.
+
+    grouped: [B, S, k, C] neighbor features, centers: [B, S, C].
+
+    Modes (the compression ladder of Table 1):
+      * ``affine``  — PointMLP-Elite: (g - c) / sigma * alpha + beta with
+        learnable per-channel alpha/beta (sigma is the std over the whole
+        batch of local offsets, as in PointMLP).
+      * ``norm``    — alpha/beta *pruned* (M-1..M-4 / PointMLP-Lite):
+        (g - c) / sigma.
+      * ``center``  — plain centering (g - c).
+    """
+    off = grouped - centers[:, :, None, :]
+    if mode == "center":
+        return off
+    sigma = jnp.sqrt(jnp.mean(off * off) + eps)
+    out = off / (sigma + eps)
+    if mode == "norm":
+        return out
+    if mode == "affine":
+        assert params is not None, "affine mode needs alpha/beta params"
+        return out * params["alpha"] + params["beta"]
+    raise ValueError(f"unknown normalize mode: {mode}")
+
+
+def group_points(xyz: jnp.ndarray, feats: jnp.ndarray,
+                 sample_idx: jnp.ndarray, k: int,
+                 affine_params: Optional[dict], mode: str
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Full local-grouper: sample -> KNN -> gather -> normalize -> concat.
+
+    Args:
+      xyz:   [B, N, 3] coordinates.
+      feats: [B, N, C] features.
+      sample_idx: [B, S] centroid indices (from FPS or URS).
+
+    Returns:
+      new_xyz  [B, S, 3], centers' features [B, S, C],
+      grouped  [B, S, k, 2C] (normalized neighbors ++ broadcast center),
+      matching PointMLP's grouper output layout.
+    """
+    new_xyz = jnp.take_along_axis(xyz, sample_idx[..., None], axis=1)
+    center_f = jnp.take_along_axis(feats, sample_idx[..., None], axis=1)
+    nbr_idx = knn_batched(new_xyz, xyz, k)                    # [B, S, k]
+    grouped = gather_neighbors(feats, nbr_idx)                # [B, S, k, C]
+    grouped = normalize_group(grouped, center_f, affine_params, mode)
+    center_b = jnp.broadcast_to(center_f[:, :, None, :], grouped.shape)
+    return new_xyz, center_f, jnp.concatenate([grouped, center_b], axis=-1)

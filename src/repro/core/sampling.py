@@ -1,0 +1,146 @@
+"""Point sampling: FPS and LFSR-based URS (HLS4PC §2.1).
+
+The paper replaces Farthest Point Sampling (FPS) — sequential, with
+data-dependent distance updates — by Uniform Random Sampling (URS) driven
+by Linear Feedback Shift Registers (LFSRs) seeded identically at training
+and deployment time.  We reproduce both:
+
+* :func:`fps` — the reference sequential FPS (``lax.fori_loop``; the
+  per-iteration distance update has a Pallas kernel in
+  ``repro.kernels.fps``).
+* :class:`LFSR` / :func:`urs_indices` — a Galois LFSR with a primitive
+  feedback polynomial, vectorized over parallel streams (the paper uses
+  multiple LFSRs with distinct initial states).  Bit-exact, seedable,
+  restart-stable — the same stream is used for training-time sampling and
+  "deployment".
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+# Primitive polynomials (Galois tap masks) giving maximal period 2^n - 1.
+GALOIS_TAPS = {
+    8: 0xB8,      # x^8 + x^6 + x^5 + x^4 + 1
+    16: 0xB400,   # x^16 + x^14 + x^13 + x^11 + 1
+    24: 0xE10000,  # x^24 + x^23 + x^22 + x^17 + 1
+    32: 0xA3000000,  # x^32 + x^30 + x^26 + x^25 + 1
+}
+
+
+def lfsr_step(state: jnp.ndarray, nbits: int = 16) -> jnp.ndarray:
+    """One Galois LFSR step. ``state`` is uint32 (per-stream), nonzero."""
+    taps = GALOIS_TAPS[nbits]
+    lsb = state & 1
+    shifted = state >> 1
+    return jnp.where(lsb == 1, shifted ^ jnp.uint32(taps), shifted)
+
+
+@functools.partial(jax.jit, static_argnames=("n_out", "nbits"))
+def lfsr_sequence(state: jnp.ndarray, n_out: int, nbits: int = 16
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Generate ``n_out`` values per stream.
+
+    Args:
+      state: uint32 array of shape [streams] (nonzero seeds).
+      n_out: values to emit per stream.
+
+    Returns:
+      (new_state [streams], values [n_out, streams] uint32 in
+      [1, 2^nbits - 1]).
+    """
+    def body(s, _):
+        s = lfsr_step(s, nbits)
+        return s, s
+
+    new_state, vals = jax.lax.scan(body, state, None, length=n_out)
+    return new_state, vals
+
+
+def seed_streams(seed: int, n_streams: int, nbits: int = 16) -> jnp.ndarray:
+    """Derive ``n_streams`` distinct nonzero LFSR seeds from an integer.
+
+    Mirrors the paper: "initialize the LFSRs with the same starting
+    states" — deterministic function of (seed, stream index).
+    """
+    mask = (1 << nbits) - 1
+    idx = jnp.arange(n_streams, dtype=jnp.uint32)
+    # Knuth multiplicative hash, clipped to nbits, forced nonzero.
+    s = (jnp.uint32(seed) * jnp.uint32(2654435761) + idx * jnp.uint32(40503))
+    s = (s >> jnp.uint32(4)) & jnp.uint32(mask)
+    return jnp.where(s == 0, jnp.uint32(1), s)
+
+
+@functools.partial(jax.jit, static_argnames=("n_points", "n_samples", "nbits"))
+def urs_indices(state: jnp.ndarray, n_points: int, n_samples: int,
+                nbits: int = 16) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Uniform Random Sampling indices from an LFSR stream.
+
+    Hardware-faithful: successive LFSR words reduced mod ``n_points``.
+    Within one period every LFSR word is distinct; after ``mod`` duplicate
+    indices are possible (as in the streaming hardware), which the grouper
+    tolerates.
+
+    Args:
+      state: uint32 [streams]; stream 0 is consumed ``n_samples`` times.
+
+    Returns: (new_state [streams], indices [n_samples] int32).
+    """
+    new_state, vals = lfsr_sequence(state, n_samples, nbits)
+    idx = (vals[:, 0] % jnp.uint32(n_points)).astype(jnp.int32)
+    return new_state, idx
+
+
+def urs_indices_batched(state: jnp.ndarray, n_points: int, n_samples: int,
+                        batch: int, nbits: int = 16
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-batch-element URS using one LFSR stream per element.
+
+    Returns (new_state [batch], indices [batch, n_samples]).
+    """
+    assert state.shape[0] >= batch, "need one LFSR stream per batch element"
+    new_state, vals = lfsr_sequence(state, n_samples, nbits)  # [S, streams]
+    idx = (vals[:, :batch].T % jnp.uint32(n_points)).astype(jnp.int32)
+    return new_state, idx
+
+
+# ---------------------------------------------------------------- FPS ----
+
+def fps(points: jnp.ndarray, n_samples: int, start_idx: int = 0
+        ) -> jnp.ndarray:
+    """Farthest Point Sampling (reference, sequential).
+
+    Args:
+      points: [N, 3] (or [N, C]) coordinates.
+      n_samples: number of centroids to select.
+
+    Returns: [n_samples] int32 indices.
+    """
+    n = points.shape[0]
+    init_dist = jnp.full((n,), jnp.inf, dtype=jnp.float32)
+    init_idx = jnp.zeros((n_samples,), dtype=jnp.int32).at[0].set(start_idx)
+
+    def body(i, carry):
+        dists, idxs = carry
+        last = points[idxs[i - 1]]
+        d = jnp.sum((points - last) ** 2, axis=-1).astype(jnp.float32)
+        dists = jnp.minimum(dists, d)
+        nxt = jnp.argmax(dists).astype(jnp.int32)
+        idxs = idxs.at[i].set(nxt)
+        return dists, idxs
+
+    _, idxs = jax.lax.fori_loop(1, n_samples, body, (init_dist, init_idx))
+    return idxs
+
+
+def fps_batched(points: jnp.ndarray, n_samples: int) -> jnp.ndarray:
+    """[B, N, C] -> [B, n_samples] via vmap over the batch."""
+    return jax.vmap(lambda p: fps(p, n_samples))(points)
+
+
+def gather_points(points: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Gather along the point axis. points [B, N, C], idx [B, S] -> [B, S, C]."""
+    return jnp.take_along_axis(points, idx[..., None], axis=1)

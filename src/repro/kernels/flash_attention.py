@@ -1,0 +1,116 @@
+"""Blockwise (flash) attention Pallas kernel with GQA + sliding window.
+
+Online-softmax attention tiled for VMEM: the KV sequence is the innermost
+sequential grid axis; running (max, normalizer, accumulator) live in VMEM
+scratch across KV tiles, so the ``[Tq, Tk]`` score matrix never exists in
+HBM.  GQA is expressed in the BlockSpec index map (each query head reads
+its KV group directly — no ``jnp.repeat`` materialization).  Causal and
+sliding-window tiles that are entirely masked are skipped via ``pl.when``
+on the grid indices (the TPU analogue of not scheduling those PEs at all).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  tq: int, tk: int, k_tiles: int, q_offset: int,
+                  causal: bool, window: int, sm_scale: float,
+                  n_valid_k: int):
+    j = pl.program_id(1)
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        m_ref[:] = jnp.full_like(m_ref, _NEG)
+        l_ref[:] = jnp.zeros_like(l_ref)
+        acc_ref[:] = jnp.zeros_like(acc_ref)
+
+    # absolute positions of this (q-tile, k-tile)
+    q_lo = j * tq + q_offset            # first query's absolute position
+    k_lo = kk * tk
+    live = jnp.bool_(True)
+    if causal:
+        live &= k_lo <= q_lo + tq - 1    # not entirely in the future
+    if window > 0:
+        live &= k_lo + tk - 1 > q_lo - window  # not entirely pre-window
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[0].astype(jnp.float32) * sm_scale       # [TQ, D]
+        k = k_ref[0].astype(jnp.float32)                  # [TK, D]
+        s = jax.lax.dot(q, k.T, preferred_element_type=jnp.float32)
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 1)
+        mask = kpos < n_valid_k          # hide padded keys
+        if causal:
+            mask &= kpos <= qpos
+        if window > 0:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, _NEG)
+        m_prev = m_ref[:]                                 # [TQ, 1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[:] = alpha * l_ref[:] + jnp.sum(p, axis=-1, keepdims=True)
+        v = v_ref[0].astype(jnp.float32)
+        acc_ref[:] = acc_ref[:] * alpha + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[:] = m_new
+
+    @pl.when(kk == k_tiles - 1)
+    def _done():
+        l = jnp.where(l_ref[:] == 0.0, 1.0, l_ref[:])
+        o_ref[0] = (acc_ref[:] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "tq", "tk", "interpret"))
+def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                           causal: bool = True, window: int = 0,
+                           tq: int = 128, tk: int = 128,
+                           interpret: bool = True) -> jnp.ndarray:
+    """q [B,H,Tq,D], k/v [B,Hkv,Tk,D] -> [B,H,Tq,D] (GQA if Hkv < H)."""
+    b, h, t_q, d = q.shape
+    hkv, t_k = k.shape[1], k.shape[2]
+    rep = h // hkv
+    tq_ = min(tq, t_q)
+    q_pad, k_pad = -t_q % tq_, -t_k % tk
+    qp = jnp.pad(q.reshape(b * h, t_q, d), ((0, 0), (0, q_pad), (0, 0)))
+    kp = jnp.pad(k.reshape(b * hkv, t_k, d), ((0, 0), (0, k_pad), (0, 0)))
+    vp = jnp.pad(v.reshape(b * hkv, t_k, d), ((0, 0), (0, k_pad), (0, 0)))
+    qt, kt = (t_q + q_pad) // tq_, (t_k + k_pad) // tk
+    kernel = functools.partial(
+        _flash_kernel, tq=tq_, tk=tk, k_tiles=kt, q_offset=t_k - t_q,
+        causal=causal, window=window, sm_scale=1.0 / (d ** 0.5),
+        n_valid_k=t_k)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, qt, kt),
+        in_specs=[
+            pl.BlockSpec((1, tq_, d), lambda i, j, kk: (i, j, 0)),
+            pl.BlockSpec((1, tk, d),
+                         lambda i, j, kk, rep=rep, h=h, hkv=hkv:
+                         ((i // h) * hkv + (i % h) // rep, kk, 0)),
+            pl.BlockSpec((1, tk, d),
+                         lambda i, j, kk, rep=rep, h=h, hkv=hkv:
+                         ((i // h) * hkv + (i % h) // rep, kk, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tq_, d), lambda i, j, kk: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, t_q + q_pad, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((tq_, 1), jnp.float32),
+            pltpu.VMEM((tq_, 1), jnp.float32),
+            pltpu.VMEM((tq_, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :t_q].reshape(b, h, t_q, d)

@@ -1,0 +1,65 @@
+"""Fused linear(+folded BN)+bias+activation Pallas kernel.
+
+The TPU rendering of HLS4PC's streaming Conv→BN→ReLU stage: after
+``repro.core.fusion`` folds BN into (w, b), the whole layer is a single
+VMEM round-trip — matmul epilogue applies bias and activation before the
+result ever leaves the core, exactly like the FPGA pipeline never spills
+the activation to BRAM between conv and ReLU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _fused_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, k_tiles: int,
+                  activation: str):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[:] = jnp.zeros_like(acc_ref)
+
+    acc_ref[:] += jax.lax.dot(x_ref[:], w_ref[:],
+                              preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == k_tiles - 1)
+    def _done():
+        y = acc_ref[:] + b_ref[:].astype(jnp.float32)
+        if activation == "relu":
+            y = jnp.maximum(y, 0.0)
+        elif activation == "gelu":
+            y = jax.nn.gelu(y)
+        o_ref[:] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "tm", "tk", "tn",
+                                             "interpret"))
+def fused_linear_pallas(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                        activation: str = "relu", tm: int = 128,
+                        tk: int = 128, tn: int = 128,
+                        interpret: bool = True) -> jnp.ndarray:
+    """act(x @ w + b): [M,K] @ [K,N] + [N] in one pass."""
+    assert activation in ("relu", "gelu", "none")
+    m, k = x.shape
+    n = w.shape[1]
+    xp = jnp.pad(x, ((0, -m % tm), (0, -k % tk)))
+    wp = jnp.pad(w, ((0, -k % tk), (0, -n % tn)))
+    bp = jnp.pad(b[None, :], ((0, 0), (0, -n % tn)))
+    mt, kt, nt = xp.shape[0] // tm, xp.shape[1] // tk, wp.shape[1] // tn
+    out = pl.pallas_call(
+        functools.partial(_fused_kernel, k_tiles=kt, activation=activation),
+        grid=(mt, nt, kt),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, tn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mt * tm, nt * tn), x.dtype),
+        scratch_shapes=[pltpu.VMEM((tm, tn), jnp.float32)],
+        interpret=interpret,
+    )(xp, wp, bp)
+    return out[:m, :n]

@@ -1,0 +1,111 @@
+"""int8 matmul Pallas kernels (HLS4PC's fixed-point MACs on the MXU).
+
+Two variants of the paper's 8-bit insight, matching its two wins:
+
+* :func:`int8_matmul_pallas`  — A8W8: both operands int8, int32 MXU
+  accumulation, dequantize in the epilogue (compute-bound layers; the MXU
+  doubles int8 throughput vs bf16).
+* :func:`w8_matmul_pallas`    — W8A16: int8 weights dequantized in VMEM
+  just before the bf16 dot (memory-bound layers — halves the HBM weight
+  traffic that dominates decode).
+
+Tiles are MXU-aligned (multiples of 128 on M/N, 128 on K) with an int32/f32
+VMEM accumulator persisted across the sequential K grid axis.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _int8_kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, k_tiles: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[:] = jnp.zeros_like(acc_ref)
+
+    acc_ref[:] += jax.lax.dot(x_ref[:], w_ref[:],
+                              preferred_element_type=jnp.int32)
+
+    @pl.when(pl.program_id(2) == k_tiles - 1)
+    def _done():
+        o_ref[:] = (acc_ref[:].astype(jnp.float32) *
+                    s_ref[:].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def _pad2(x, tm, tn):
+    m, n = x.shape
+    return jnp.pad(x, ((0, -m % tm), (0, -n % tn)))
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tk", "tn", "out_dtype",
+                                             "interpret"))
+def int8_matmul_pallas(x_q: jnp.ndarray, w_q: jnp.ndarray,
+                       scale: jnp.ndarray, tm: int = 128, tk: int = 128,
+                       tn: int = 128, out_dtype=jnp.float32,
+                       interpret: bool = True) -> jnp.ndarray:
+    """x_q int8 [M,K] @ w_q int8 [K,N] -> out_dtype [M,N], scaled by
+    ``scale`` (combined act*weight scale, shape [1,N] or [1,1])."""
+    m, k = x_q.shape
+    n = w_q.shape[1]
+    xp, wp = _pad2(x_q, tm, tk), _pad2(w_q, tk, tn)
+    sp = _pad2(jnp.broadcast_to(scale.astype(jnp.float32), (1, n)), 1, tn)
+    mt, kt, nt = xp.shape[0] // tm, xp.shape[1] // tk, wp.shape[1] // tn
+    out = pl.pallas_call(
+        functools.partial(_int8_kernel, k_tiles=kt),
+        grid=(mt, nt, kt),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, tn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mt * tm, nt * tn), out_dtype),
+        scratch_shapes=[pltpu.VMEM((tm, tn), jnp.int32)],
+        interpret=interpret,
+    )(xp, wp, sp)
+    return out[:m, :n]
+
+
+def _w8_kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, k_tiles: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[:] = jnp.zeros_like(acc_ref)
+
+    w = w_ref[:].astype(x_ref.dtype)          # dequant int8 -> bf16 in VMEM
+    acc_ref[:] += jax.lax.dot(x_ref[:], w,
+                              preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == k_tiles - 1)
+    def _done():
+        o_ref[:] = (acc_ref[:] * s_ref[:].astype(jnp.float32)
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tk", "tn", "interpret"))
+def w8_matmul_pallas(x: jnp.ndarray, w_q: jnp.ndarray, w_scale: jnp.ndarray,
+                     tm: int = 128, tk: int = 128, tn: int = 128,
+                     interpret: bool = True) -> jnp.ndarray:
+    """x [M,K] (bf16/f32) @ int8 w_q [K,N] * w_scale [1,N] -> x.dtype."""
+    m, k = x.shape
+    n = w_q.shape[1]
+    xp, wp = _pad2(x, tm, tk), _pad2(w_q, tk, tn)
+    sp = _pad2(jnp.broadcast_to(w_scale.astype(jnp.float32), (1, n)), 1, tn)
+    mt, kt, nt = xp.shape[0] // tm, xp.shape[1] // tk, wp.shape[1] // tn
+    out = pl.pallas_call(
+        functools.partial(_w8_kernel, k_tiles=kt),
+        grid=(mt, nt, kt),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, tn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mt * tm, nt * tn), x.dtype),
+        scratch_shapes=[pltpu.VMEM((tm, tn), jnp.float32)],
+        interpret=interpret,
+    )(xp, wp, sp)
+    return out[:m, :n]

@@ -1,0 +1,334 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and record memory / cost / collective analysis.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b \
+      [--shape train_4k] [--mesh pod|multipod|both] [--profile default] \
+      [--out artifacts/dryrun]
+
+Emits one JSON per cell: artifacts/dryrun/<mesh>/<arch>/<shape>.json.
+Any sharding mismatch / compile OOM / unsupported collective here is a
+bug in the framework — the run fails loudly.
+"""
+import argparse
+import json
+import math
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import roofline as RL
+from repro.configs import (LM_SHAPES, get_config, list_archs,
+                           cell_is_runnable)
+from repro.configs.base import TrainConfig
+from repro.launch import steps as S
+from repro.launch.mesh import make_production_mesh
+from repro.models.api import get_model
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _tree_param_counts(shape_tree, cfg):
+    """(total, active, embed_table) param counts from a shape tree."""
+    flat = jax.tree_util.tree_flatten_with_path(shape_tree)[0]
+    total = active = embed = 0
+    frac = (cfg.experts_per_token / cfg.n_experts) if cfg.n_experts else 1.0
+    for path, leaf in flat:
+        keys = [str(getattr(p, "key", p)) for p in path]
+        n = math.prod(leaf.shape)
+        total += n
+        if "table" in keys and not cfg.tie_embeddings:
+            embed += n
+            continue
+        if any(k in ("gate_w", "up_w", "down_w") for k in keys):
+            active += int(n * frac)
+        else:
+            active += n
+    return total, active, embed
+
+
+def _compile_cell(cfg, shape, mesh, tc):
+    """Lower + compile one step program. Returns (compiled, seconds)."""
+    from repro.sharding.context import set_mesh
+    set_mesh(mesh)                      # manual-collective paths (MoE)
+    api = get_model(cfg)
+    trees = S.shape_trees(api, shape, tc)
+    shards = S.cell_shardings(api, shape, mesh, trees, cfg.sharding_profile)
+    rep = NamedSharding(mesh, P())
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            step, _ = S.build_train_step(api, mesh, tc,
+                                         cfg.sharding_profile)
+            jitted = jax.jit(
+                step,
+                in_shardings=(shards["params"], shards["opt"],
+                              shards["inputs"], rep),
+                out_shardings=(shards["params"], shards["opt"], None),
+                donate_argnums=(0, 1))
+            lowered = jitted.lower(trees["params"], trees["opt"],
+                                   trees["inputs"],
+                                   jax.ShapeDtypeStruct((), jnp.int32))
+        else:
+            if shape.kind == "prefill":
+                step = S.build_prefill_step(api, mesh, cfg.sharding_profile)
+            else:
+                step = S.build_decode_step(api, mesh)
+            jitted = jax.jit(step,
+                             in_shardings=(shards["params"],
+                                           shards["inputs"],
+                                           shards["cache"]),
+                             out_shardings=(None, shards["cache"]),
+                             donate_argnums=(2,))
+            lowered = jitted.lower(trees["params"], trees["inputs"],
+                                   trees["cache"])
+        compiled = lowered.compile()
+    return compiled, time.time() - t0
+
+
+def _cost_of(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    coll = RL.parse_collectives(compiled.as_text())
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "coll_bytes": coll.total_bytes,
+            "coll_wire": coll.wire_bytes,
+            "coll_by_type": dict(coll.by_type)}
+
+
+def _layer_unit(cfg) -> int:
+    """Smallest coherent layer-count quantum (xLSTM: one 7m+1s group)."""
+    return cfg.slstm_every if cfg.slstm_every > 0 else 1
+
+
+def _with_layers(cfg, n: int):
+    kw = {"n_layers": n}
+    if cfg.family == "audio":
+        kw["n_enc_layers"] = max(1, n * cfg.n_enc_layers // cfg.n_layers)
+    return cfg.replace(**kw)
+
+
+# Full-unroll threshold: smaller stacks compile fast enough to unroll whole.
+_FULL_UNROLL_MAX_LAYERS = 22
+
+# §Perf hillclimb variants: named config deltas applied on top of the
+# baseline (the paper-faithful defaults). Recorded separately in
+# EXPERIMENTS.md §Perf.
+VARIANTS = {
+    "sp": dict(seq_parallel=True),
+    "chunked": dict(attn_impl="xla_chunked"),
+    "sp_chunked": dict(seq_parallel=True, attn_impl="xla_chunked"),
+    "moe_local": dict(sharding_profile="moe_local"),
+    "moe_local_sp": dict(sharding_profile="moe_local", seq_parallel=True,
+                         attn_impl="xla_chunked"),
+    "moe_local_chunked": dict(sharding_profile="moe_local",
+                              attn_impl="xla_chunked"),
+    "fsdp_chunked": dict(sharding_profile="fsdp",
+                         attn_impl="xla_chunked"),
+    "w8": dict(quant="W8"),           # int8 weights (decode cells)
+    "w8_2d": dict(quant="W8", sharding_profile="infer2d"),
+    "infer2d": dict(sharding_profile="infer2d"),
+    "cache_seq": dict(sharding_profile="cache_seq"),
+    "w8_cache_seq": dict(quant="W8", sharding_profile="cache_seq"),
+}
+
+
+def apply_variant(cfg, variant):
+    kw = dict(VARIANTS[variant])
+    if kw.pop("quant", None) == "W8":
+        from repro.core.quant import QuantConfig
+        kw["quant"] = QuantConfig(w_bits=8, a_bits=16, backend="int8_ref")
+    return cfg.replace(**kw)
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             profile: str = "default", out_dir: str = "artifacts/dryrun",
+             fast: bool = False, variant: str = None,
+             extrap=(1, 2)) -> dict:
+    """Methodology (see EXPERIMENTS.md §Dry-run):
+
+    1. Compile the PRODUCTION program (scan-over-layers + remat) — this is
+       the sharding-coherence proof and the memory_analysis source.
+    2. XLA cost_analysis does not multiply while-loop bodies by trip
+       count, so roofline terms come from *unrolled* lowerings: fully
+       unrolled when the stack is small, else two reduced unrolled
+       compiles (a and b=2a layer units) whose per-layer delta is
+       extrapolated to the full depth (layer costs are exactly linear —
+       every layer is identical under SPMD).
+    """
+    cfg = get_config(arch)
+    if profile != "default":
+        cfg = cfg.replace(sharding_profile=profile)
+    if variant:
+        cfg = apply_variant(cfg, variant)
+        profile = variant
+    shape = LM_SHAPES[shape_name]
+    ok, why = cell_is_runnable(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "profile": profile, "kind": shape.kind,
+           "seq_len": shape.seq_len, "global_batch": shape.global_batch}
+    out_path = pathlib.Path(out_dir) / mesh_kind / arch
+    out_path.mkdir(parents=True, exist_ok=True)
+    f = out_path / (shape_name +
+                    ("" if profile == "default" else "." + profile) +
+                    ".json")
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        f.write_text(json.dumps(rec, indent=1))
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    n_chips = math.prod(mesh.devices.shape)
+    api = get_model(cfg)
+    tc = TrainConfig(optimizer="adamw", lr=3e-4, lr_min=3e-5)
+    trees = S.shape_trees(api, shape, tc)
+    total, active, embed = _tree_param_counts(trees["params"], cfg)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    model_flops = RL.model_flops_estimate(active - embed, tokens, shape.kind)
+    rec.update(params_total=total, params_active=active, tokens=tokens)
+
+    # --- 1. production (scan) compile: coherence proof + memory ---
+    compiled, t_prod = _compile_cell(cfg, shape, mesh, tc)
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for field in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes"):
+            v = getattr(ma, field, None)
+            if v is not None:
+                mem[field] = int(v)
+    except Exception as e:          # noqa: BLE001 - backend-dependent
+        mem["error"] = str(e)
+    bytes_per_device = (mem.get("argument_size_in_bytes", 0) +
+                        mem.get("temp_size_in_bytes", 0) -
+                        mem.get("alias_size_in_bytes", 0))
+    scan_cost = _cost_of(compiled)
+    del compiled
+
+    if fast:
+        rec.update(status="ok", n_chips=n_chips,
+                   compile_s=round(t_prod, 2), cost_method="fast(scan_raw)",
+                   memory=mem, bytes_per_device=int(bytes_per_device),
+                   scan_cost_raw=scan_cost)
+        f.write_text(json.dumps(rec, indent=1))
+        return rec
+
+    # --- 2. cost model from unrolled lowerings ---
+    unit = _layer_unit(cfg)
+    t_unroll = 0.0
+    if cfg.n_layers <= _FULL_UNROLL_MAX_LAYERS and unit == 1:
+        cu, t_unroll = _compile_cell(cfg.replace(unroll_layers=True),
+                                     shape, mesh, tc)
+        cost = _cost_of(cu)
+        method = "unrolled_full"
+        del cu
+    else:
+        a_units, b_units = extrap
+        a, b = a_units * unit, b_units * unit
+        ca_, ta = _compile_cell(
+            _with_layers(cfg, a).replace(unroll_layers=True),
+            shape, mesh, tc)
+        cost_a = _cost_of(ca_)
+        del ca_
+        cb_, tb = _compile_cell(
+            _with_layers(cfg, b).replace(unroll_layers=True),
+            shape, mesh, tc)
+        cost_b = _cost_of(cb_)
+        del cb_
+        t_unroll = ta + tb
+        n_units = cfg.n_layers // unit
+        cost = {}
+        for k in ("flops", "bytes", "coll_bytes", "coll_wire"):
+            per = (cost_b[k] - cost_a[k]) / (b_units - a_units)
+            cost[k] = cost_a[k] + (n_units - a_units) * per
+        cost["coll_by_type"] = {
+            op: cost_a["coll_by_type"].get(op, 0.0) +
+            (n_units - a_units) *
+            (cost_b["coll_by_type"].get(op, 0.0) -
+             cost_a["coll_by_type"].get(op, 0.0)) / (b_units - a_units)
+            for op in set(cost_a["coll_by_type"]) |
+            set(cost_b["coll_by_type"])}
+        method = f"extrapolated(a={a},b={b})"
+
+    rl = RL.Roofline(flops=cost["flops"], hbm_bytes=cost["bytes"],
+                     coll_bytes=cost["coll_bytes"],
+                     coll_wire_bytes=cost["coll_wire"],
+                     coll_by_type=cost["coll_by_type"],
+                     model_flops=model_flops)
+    rec.update(
+        status="ok", n_chips=n_chips,
+        compile_s=round(t_prod, 2), unroll_compile_s=round(t_unroll, 2),
+        cost_method=method, memory=mem,
+        bytes_per_device=int(bytes_per_device),
+        scan_cost_raw=scan_cost,
+        roofline=rl.to_dict(),
+        useful_flops_ratio=rl.useful_flops_ratio(n_chips),
+        roofline_fraction=rl.roofline_fraction(n_chips),
+    )
+    f.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="pod",
+                    choices=["pod", "multipod", "both"])
+    ap.add_argument("--profile", default="default")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--fast", action="store_true",
+                    help="production compile only (skip cost lowerings)")
+    ap.add_argument("--variant", default=None, choices=list(VARIANTS))
+    ap.add_argument("--extrap", default="1,2",
+                    help="unrolled extrapolation anchor unit counts a,b")
+    args = ap.parse_args()
+
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    shapes = list(LM_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = (["pod", "multipod"] if args.mesh == "both" else [args.mesh])
+    failures = 0
+    for mesh_kind in meshes:
+        for arch in archs:
+            for shape in shapes:
+                tag = f"[{mesh_kind}|{arch}|{shape}]"
+                try:
+                    rec = run_cell(arch, shape, mesh_kind, args.profile,
+                                   args.out, fast=args.fast,
+                                   variant=args.variant,
+                                   extrap=tuple(int(v) for v in
+                                                args.extrap.split(",")))
+                except Exception:   # noqa: BLE001
+                    failures += 1
+                    print(f"{tag} FAILED\n{traceback.format_exc()}",
+                          flush=True)
+                    continue
+                if rec["status"] == "skipped":
+                    print(f"{tag} SKIPPED: {rec['reason']}", flush=True)
+                elif "roofline" not in rec:
+                    print(f"{tag} ok compile={rec['compile_s']:.1f}s "
+                          f"bytes/dev={rec['bytes_per_device']/2**30:.2f}GiB "
+                          f"(fast)", flush=True)
+                else:
+                    r = rec["roofline"]
+                    print(f"{tag} ok compile={rec['compile_s']:.1f}s "
+                          f"bytes/dev={rec['bytes_per_device']/2**30:.2f}GiB "
+                          f"t_comp={r['t_compute']:.3e} "
+                          f"t_mem={r['t_memory']:.3e} "
+                          f"t_coll={r['t_collective']:.3e} "
+                          f"bound={r['bottleneck']}", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Step builders: pjit-ready train / prefill / decode steps per arch.
+
+These are what the launcher runs and what the dry-run lowers; the
+sharding rules in ``repro.sharding.rules`` supply in/out shardings.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.models.api import ModelAPI
+from repro.sharding import rules
+from repro.train import optimizer as opt_lib
+
+
+def build_train_step(api: ModelAPI, mesh, train_cfg: TrainConfig,
+                     profile: str = "default"):
+    init_opt, update = opt_lib.get_optimizer(train_cfg)
+
+    def train_step(params, opt_state, batch, step):
+        batch = {k: rules.constrain_batch(v, mesh, profile)
+                 for k, v in batch.items()}
+        (loss, metrics), grads = jax.value_and_grad(
+            api.loss_fn, has_aux=True)(params, batch)
+        grads, gnorm = opt_lib.clip_by_global_norm(grads, 1.0)
+        lr = opt_lib.cosine_lr(step, train_cfg)
+        params, opt_state = update(grads, opt_state, params, lr, train_cfg)
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr)
+        return params, opt_state, metrics
+
+    return train_step, init_opt
+
+
+def build_prefill_step(api: ModelAPI, mesh, profile: str = "default"):
+    def prefill_step(params, batch, cache):
+        batch = {k: rules.constrain_batch(v, mesh, profile)
+                 for k, v in batch.items()}
+        return api.prefill(params, batch, cache)
+    return prefill_step
+
+
+def build_decode_step(api: ModelAPI, mesh):
+    def serve_step(params, batch, cache):
+        return api.decode_step(params, batch, cache)
+    return serve_step
+
+
+def shape_trees(api: ModelAPI, shape: ShapeConfig, train_cfg: TrainConfig):
+    """(abstract) input/param/opt/cache trees for lowering — all
+    ShapeDtypeStruct, no allocation."""
+    specs = api.input_specs(shape)
+    key = jax.random.PRNGKey(0)
+    cfg = api.cfg
+    if (shape.kind != "train" and cfg.quant.enabled
+            and cfg.quant.w_bits <= 8):
+        from repro.core.quant import quantize_tree
+        params_s = jax.eval_shape(
+            lambda k: quantize_tree(api.init(k), cfg.quant), key)
+    else:
+        params_s = jax.eval_shape(api.init, key)
+    out: Dict[str, Any] = {"inputs": specs, "params": params_s}
+    if shape.kind == "train":
+        init_opt, _ = opt_lib.get_optimizer(train_cfg)
+        out["opt"] = jax.eval_shape(init_opt, params_s)
+    else:
+        b = shape.global_batch
+        out["cache"] = jax.eval_shape(
+            functools.partial(api.init_cache, b, shape.seq_len))
+    return out
+
+
+def cell_shardings(api: ModelAPI, shape: ShapeConfig, mesh,
+                   trees: Dict[str, Any], profile: str = "default"):
+    """NamedShardings for every lowering operand."""
+    out = {
+        "params": rules.params_shardings(trees["params"], mesh, profile),
+        "inputs": rules.batch_shardings(trees["inputs"], mesh, profile),
+    }
+    if "opt" in trees:
+        out["opt"] = rules.params_shardings(trees["opt"], mesh, profile)
+    if "cache" in trees:
+        out["cache"] = rules.cache_shardings(trees["cache"], mesh, profile)
+    return out

@@ -1,0 +1,69 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
+        --steps 1000 [--smoke] [--microbatch 32] [--ckpt-dir ...]
+
+On a TPU fleet this runs under `jax.distributed.initialize()` with the
+production mesh; on this host it runs the same loop on the host mesh.
+Restart the same command after a crash: it resumes from the latest
+checkpoint with the data stream realigned (fault-tolerance contract —
+see tests/test_train_infra.py).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=1000)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-scale)")
+    ap.add_argument("--profile", default="default",
+                    help="sharding profile: default|fsdp|moe_local")
+    ap.add_argument("--grad-compress-bits", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="checkpoints/launch")
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="use make_production_mesh (requires 256 devices)")
+    args = ap.parse_args()
+
+    # late imports: jax.distributed may need initializing first on a fleet
+    from repro.configs import get_config, get_smoke_config
+    from repro.configs.base import TrainConfig
+    from repro.data import lm_data
+    from repro.launch.mesh import make_host_mesh, make_production_mesh
+    from repro.models.api import get_model
+    from repro.sharding.context import set_mesh
+    from repro.train.train_loop import fit
+
+    cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
+    cfg = cfg.replace(sharding_profile=args.profile)
+    mesh = (make_production_mesh() if args.production_mesh
+            else make_host_mesh())
+    set_mesh(mesh)
+    api = get_model(cfg)
+    tc = TrainConfig(optimizer="adamw", lr=args.lr, lr_min=args.lr / 10,
+                     steps=args.steps, batch_size=args.batch,
+                     microbatch=args.microbatch,
+                     grad_compress_bits=args.grad_compress_bits,
+                     checkpoint_every=max(args.steps // 10, 1),
+                     checkpoint_dir=args.ckpt_dir)
+    data = lambda start: lm_data.stream(          # noqa: E731
+        seed=tc.seed, batch=args.batch, seq_len=args.seq,
+        vocab=cfg.vocab_size, start_step=start,
+        host_id=jax.process_index())
+    result = fit(api, mesh, tc, data)
+    h = result["history"]
+    print(f"done: loss {h[0]['loss']:.4f} -> {h[-1]['loss']:.4f}; "
+          f"stragglers: {len(result['stragglers'])}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,178 @@
+"""Unified model API: one dispatch surface over all families.
+
+``get_model(cfg)`` -> :class:`ModelAPI` with a uniform interface:
+  init / loss_fn / forward / init_cache / prefill / decode_step /
+  input_specs(shape) — the latter returns ``ShapeDtypeStruct`` stand-ins
+  (weak-type-correct, shardable, no allocation) for the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec as E
+from repro.models import hymba as HY
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models import xlstm as X
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelConfig
+    init: Callable
+    loss_fn: Callable            # (params, batch) -> (loss, metrics)
+    forward: Callable            # (params, inputs) -> (logits, aux)
+    init_cache: Optional[Callable]
+    prefill: Optional[Callable]  # (params, batch, cache) -> (logits, cache)
+    decode_step: Optional[Callable]
+    input_specs: Callable        # (shape_cfg) -> dict of ShapeDtypeStruct
+
+
+def _tok(b, s):
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def _emb(b, s, d):
+    return jax.ShapeDtypeStruct((b, s, d), jnp.float32)
+
+
+def get_model(cfg: ModelConfig) -> ModelAPI:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return _decoder_lm(cfg)
+    if fam == "audio":
+        return _encdec_lm(cfg)
+    if fam == "ssm":
+        return _xlstm_lm(cfg)
+    if fam == "hybrid":
+        return _hymba_lm(cfg)
+    raise ValueError(f"unknown family {fam}")
+
+
+# ----------------------------------------------------- decoder-only -----
+
+def _decoder_lm(cfg: ModelConfig) -> ModelAPI:
+    stub = cfg.frontend == "patch_stub"
+
+    def loss_fn(params, batch):
+        return T.lm_loss(params, cfg, batch)
+
+    def input_specs(shape: ShapeConfig) -> Dict[str, Any]:
+        b, s = shape.global_batch, shape.seq_len
+        inp = _emb(b, s, cfg.d_model) if stub else _tok(b, s)
+        if shape.kind == "train":
+            return {"tokens": inp, "labels": _tok(b, s)}
+        if shape.kind == "prefill":
+            return {"tokens": inp}
+        return {"token": jax.ShapeDtypeStruct((b,), jnp.int32),
+                "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    return ModelAPI(
+        cfg=cfg,
+        init=lambda key: T.lm_init(key, cfg),
+        loss_fn=loss_fn,
+        forward=lambda p, x: T.lm_forward(p, cfg, x),
+        init_cache=lambda b, s: T.lm_init_cache(cfg, b, s),
+        prefill=lambda p, batch, c: T.lm_prefill(p, cfg, batch["tokens"], c),
+        decode_step=lambda p, batch, c: T.lm_decode_step(
+            p, cfg, batch["token"], batch["pos"], c),
+        input_specs=input_specs)
+
+
+# -------------------------------------------------- encoder-decoder -----
+
+def _encdec_lm(cfg: ModelConfig) -> ModelAPI:
+    def loss_fn(params, batch):
+        logits, aux = E.encdec_forward(params, cfg, batch["frames"],
+                                       batch["tokens"])
+        ce = L.softmax_cross_entropy(logits, batch["labels"])
+        return ce, {"loss": ce, "ce": ce, "moe_aux": aux}
+
+    def input_specs(shape: ShapeConfig) -> Dict[str, Any]:
+        b, s = shape.global_batch, shape.seq_len
+        frames = _emb(b, cfg.enc_seq, cfg.d_model)     # stub frontend
+        if shape.kind == "train":
+            return {"frames": frames, "tokens": _tok(b, s),
+                    "labels": _tok(b, s)}
+        if shape.kind == "prefill":
+            return {"frames": frames, "tokens": _tok(b, s)}
+        return {"token": jax.ShapeDtypeStruct((b,), jnp.int32),
+                "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    return ModelAPI(
+        cfg=cfg,
+        init=lambda key: E.encdec_init(key, cfg),
+        loss_fn=loss_fn,
+        forward=lambda p, batch: E.encdec_forward(p, cfg, batch["frames"],
+                                                  batch["tokens"]),
+        init_cache=lambda b, s: E.encdec_init_cache(cfg, b, s),
+        prefill=lambda p, batch, c: E.encdec_prefill(
+            p, cfg, batch["frames"], batch["tokens"], c),
+        decode_step=lambda p, batch, c: E.encdec_decode_step(
+            p, cfg, batch["token"], batch["pos"], c),
+        input_specs=input_specs)
+
+
+# ------------------------------------------------------------- ssm ------
+
+def _xlstm_lm(cfg: ModelConfig) -> ModelAPI:
+    def loss_fn(params, batch):
+        logits, aux = X.xlstm_forward(params, cfg, batch["tokens"])
+        ce = L.softmax_cross_entropy(logits, batch["labels"])
+        return ce, {"loss": ce, "ce": ce, "moe_aux": aux}
+
+    def input_specs(shape: ShapeConfig) -> Dict[str, Any]:
+        b, s = shape.global_batch, shape.seq_len
+        if shape.kind == "train":
+            return {"tokens": _tok(b, s), "labels": _tok(b, s)}
+        if shape.kind == "prefill":
+            return {"tokens": _tok(b, s)}
+        return {"token": jax.ShapeDtypeStruct((b,), jnp.int32),
+                "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    return ModelAPI(
+        cfg=cfg,
+        init=lambda key: X.xlstm_init(key, cfg),
+        loss_fn=loss_fn,
+        forward=lambda p, x: X.xlstm_forward(p, cfg, x),
+        init_cache=lambda b, s: X.xlstm_init_cache(cfg, b, s),
+        prefill=lambda p, batch, c: X.xlstm_prefill(p, cfg,
+                                                    batch["tokens"], c),
+        decode_step=lambda p, batch, c: X.xlstm_decode_step(
+            p, cfg, batch["token"], batch["pos"], c),
+        input_specs=input_specs)
+
+
+# ------------------------------------------------------------ hybrid ----
+
+def _hymba_lm(cfg: ModelConfig) -> ModelAPI:
+    def loss_fn(params, batch):
+        logits, aux = HY.hymba_forward(params, cfg, batch["tokens"])
+        ce = L.softmax_cross_entropy(logits, batch["labels"])
+        return ce, {"loss": ce, "ce": ce, "moe_aux": aux}
+
+    def input_specs(shape: ShapeConfig) -> Dict[str, Any]:
+        b, s = shape.global_batch, shape.seq_len
+        if shape.kind == "train":
+            return {"tokens": _tok(b, s), "labels": _tok(b, s)}
+        if shape.kind == "prefill":
+            return {"tokens": _tok(b, s)}
+        return {"token": jax.ShapeDtypeStruct((b,), jnp.int32),
+                "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    return ModelAPI(
+        cfg=cfg,
+        init=lambda key: HY.hymba_init(key, cfg),
+        loss_fn=loss_fn,
+        forward=lambda p, x: HY.hymba_forward(p, cfg, x),
+        init_cache=lambda b, s: HY.hymba_cache_init(cfg, b, s),
+        prefill=lambda p, batch, c: HY.hymba_prefill(p, cfg,
+                                                     batch["tokens"], c),
+        decode_step=lambda p, batch, c: HY.hymba_decode_step(
+            p, cfg, batch["token"], batch["pos"], c),
+        input_specs=input_specs)

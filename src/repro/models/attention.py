@@ -1,0 +1,234 @@
+"""GQA attention with KV caches (full, causal, sliding-window, cross).
+
+Three execution modes per the shape cells:
+  * ``train``   — full-sequence causal attention, no cache.
+  * ``prefill`` — full-sequence attention + cache write.
+  * ``decode``  — one query token against a cache (dense or rolling
+    sliding-window cache).
+
+Implementation switch: ``impl='xla'`` (einsum; used by the 512-device
+dry-run since Pallas doesn't lower on the CPU stand-in backend) or
+``impl='flash'`` (the Pallas blockwise kernel in ``repro.kernels``).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+def attn_init(key, cfg: ModelConfig, d_model: Optional[int] = None,
+              n_heads: Optional[int] = None) -> Dict:
+    d = d_model or cfg.d_model
+    h = n_heads or cfg.n_heads
+    hd = cfg.kv_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "wq": L.dense_init(kq, d, h * hd, bias=False, dtype=dt),
+        "wk": L.dense_init(kk, d, cfg.n_kv_heads * hd, bias=False, dtype=dt),
+        "wv": L.dense_init(kv, d, cfg.n_kv_heads * hd, bias=False, dtype=dt),
+        "wo": L.dense_init(ko, h * hd, d, bias=False, dtype=dt),
+    }
+
+
+def _split_heads(x: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    b, t, _ = x.shape
+    return x.reshape(b, t, n_heads, -1)
+
+
+def _sdpa_xla(q, k, v, causal: bool, window: int, q_offset,
+              kv_len: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """q [B,T,H,D], k/v [B,S,Hkv,D]. GQA via reshape (no repeat copy).
+    q_offset: absolute position of q[0] (int or traced scalar).
+    kv_len: optional count of valid cache entries (decode)."""
+    b, t, h, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, t, hkv, g, d)
+    logits = jnp.einsum("bthgd,bshd->bhgts", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / (d ** 0.5)
+    qpos = q_offset + jnp.arange(t)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((t, s), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    if kv_len is not None:
+        mask &= kpos < kv_len
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgts,bshd->bthgd", p, v.astype(jnp.float32))
+    return out.reshape(b, t, h, d).astype(q.dtype)
+
+
+def _sdpa_xla_chunked(q, k, v, causal: bool, window: int, q_offset,
+                      chunk: int = 512) -> jnp.ndarray:
+    """Online-softmax attention, KV chunked via ``lax.scan`` — the pure-XLA
+    flash form (§Perf lever: the [T,S] score matrix never materializes;
+    peak transient drops from O(T·S) to O(T·chunk)).  Used for train /
+    prefill; decode keeps the single-token dense path."""
+    b, t, h, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    pad = -s % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = (s + pad) // chunk
+    g = h // hkv
+    qg = (q.reshape(b, t, hkv, g, d).astype(jnp.float32) / (d ** 0.5))
+    kc = k.reshape(b, nc, chunk, hkv, d)
+    vc = v.reshape(b, nc, chunk, hkv, d)
+    qpos = q_offset + jnp.arange(t)[:, None]
+
+    def body(carry, xs):
+        m, l, acc = carry                       # [B,hkv,g,T,(1|D)]
+        kj, vj, j = xs
+        logits = jnp.einsum("bthgd,bchd->bhgtc", qg,
+                            kj.astype(jnp.float32))
+        kpos = j * chunk + jnp.arange(chunk)[None, :]
+        mask = kpos < s                          # hide padding
+        if causal:
+            mask = mask & (kpos <= qpos)
+        if window > 0:
+            mask = mask & (kpos > qpos - window)
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        m_new = jnp.maximum(m, jnp.max(logits, -1, keepdims=True))
+        p = jnp.exp(logits - m_new)
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        alpha = jnp.exp(m - m_new)
+        l = alpha * l + jnp.sum(p, -1, keepdims=True)
+        acc = alpha * acc + \
+            jnp.einsum("bhgtc,bchd->bhgtd", p, vj.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, hkv, g, t, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, t, 1), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, t, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (kc.swapaxes(0, 1), vc.swapaxes(0, 1), jnp.arange(nc)))
+    l = jnp.where(l == 0.0, 1.0, l)
+    out = acc / l
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, t, h, d).astype(q.dtype)
+
+
+def attn_apply(p: Dict, cfg: ModelConfig, x: jnp.ndarray, *,
+               causal: bool = True, q_offset=0,
+               cache: Optional[Dict] = None,
+               cache_pos: Optional[jnp.ndarray] = None,
+               cross_kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+               rope: bool = True, window: int = 0,
+               impl: Optional[str] = None,
+               n_heads: Optional[int] = None,
+               ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Returns (out [B,T,d], updated cache or None).
+
+    cache: {"k","v": [B, S_max, Hkv, D]} — dense, or rolling when
+    ``window > 0`` (slots indexed by absolute_pos % window).
+    cache_pos: absolute position of x[:, 0] (scalar) when caching.
+    cross_kv: precomputed encoder (k, v) for cross-attention.
+    """
+    impl = impl or cfg.attn_impl
+    h = n_heads or cfg.n_heads
+    hd = cfg.kv_head_dim
+    quant = cfg.quant if cfg.quant.enabled else None
+    b, t, _ = x.shape
+    if cache is not None and cache_pos is not None:
+        q_offset = cache_pos          # absolute positions for RoPE/masks
+    q = _split_heads(L.dense_apply(p["wq"], x, quant), h)
+
+    if cross_kv is not None:
+        k, v = cross_kv
+        out = _sdpa_xla(q, k, v, causal=False, window=0, q_offset=0)
+        return L.dense_apply(p["wo"], out.reshape(b, t, -1), quant), None
+
+    k = _split_heads(L.dense_apply(p["wk"], x, quant), cfg.n_kv_heads)
+    v = _split_heads(L.dense_apply(p["wv"], x, quant), cfg.n_kv_heads)
+    if rope:
+        pos = q_offset + jnp.arange(t)
+        q = L.apply_rope(q.swapaxes(1, 2), pos, cfg.rope_theta).swapaxes(1, 2)
+        k = L.apply_rope(k.swapaxes(1, 2), pos, cfg.rope_theta).swapaxes(1, 2)
+
+    new_cache = None
+    kv_len = None
+    if cache is not None:
+        s_max = cache["k"].shape[1]
+        if window > 0 and s_max == window:
+            # rolling cache: slot = absolute_pos % window; only the last
+            # min(t, window) tokens survive a multi-token (prefill) write,
+            # so slot indices never collide within one update.
+            w_eff = min(t, window)
+            tail_k, tail_v = k[:, t - w_eff:], v[:, t - w_eff:]
+            slots = (cache_pos + t - w_eff + jnp.arange(w_eff)) % window
+            ck = cache["k"].at[:, slots].set(tail_k.astype(cache["k"].dtype))
+            cv = cache["v"].at[:, slots].set(tail_v.astype(cache["v"].dtype))
+            new_cache = {"k": ck, "v": cv}
+            if t > 1:
+                # prefill: windowed attention over the in-sequence keys
+                out = _sdpa_xla(q, k, v, causal=True, window=window,
+                                q_offset=0)
+            else:
+                # decode: read the rolling cache with reconstructed
+                # absolute slot positions
+                pos_now = cache_pos + t - 1             # last written pos
+                slot_ids = jnp.arange(window)
+                slot_pos = pos_now - ((pos_now - slot_ids) % window)
+                out = _rolling_sdpa(q, ck, cv, slot_pos, pos_now, window,
+                                    q_offset=cache_pos)
+            return L.dense_apply(p["wo"], out.reshape(b, t, -1), quant), \
+                new_cache
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, cache_pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, cache_pos, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        k, v = ck, cv
+        kv_len = cache_pos + t
+        q_offset = cache_pos
+
+    if impl == "flash" and cache is None:
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(q.swapaxes(1, 2), k.swapaxes(1, 2),
+                                   v.swapaxes(1, 2), causal=causal,
+                                   window=window).swapaxes(1, 2)
+    elif impl == "xla_chunked" and t > 1 and kv_len is None:
+        out = _sdpa_xla_chunked(q, k, v, causal=causal, window=window,
+                                q_offset=q_offset)
+    else:
+        out = _sdpa_xla(q, k, v, causal=causal, window=window,
+                        q_offset=q_offset, kv_len=kv_len)
+    return L.dense_apply(p["wo"], out.reshape(b, t, -1), quant), new_cache
+
+
+def _rolling_sdpa(q, k, v, slot_pos, pos_now, window, q_offset):
+    """Attention over a rolling window cache. slot_pos [W] absolute
+    positions; valid iff 0 <= slot_pos <= qpos and slot_pos > qpos-window."""
+    b, t, h, d = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, t, hkv, g, d)
+    logits = jnp.einsum("bthgd,bshd->bhgts", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / (d ** 0.5)
+    qpos = q_offset + jnp.arange(t)[:, None]
+    sp = slot_pos[None, :]
+    mask = (sp >= 0) & (sp <= qpos) & (sp > qpos - window)
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgts,bshd->bthgd", p, v.astype(jnp.float32))
+    return out.reshape(b, t, h, d).astype(q.dtype)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               window: int = 0) -> Dict:
+    """Dense cache [B, S, Hkv, D] or rolling [B, W, Hkv, D] per layer —
+    stacked over layers by the caller."""
+    s = window if window > 0 else max_len
+    shape = (batch, s, cfg.n_kv_heads, cfg.kv_head_dim)
+    dt = jnp.dtype(cfg.dtype)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}

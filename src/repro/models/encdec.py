@@ -1,0 +1,214 @@
+"""Whisper-style encoder-decoder (arch ``whisper-tiny``; [audio]).
+
+Per the assignment, the conv audio frontend is a STUB — ``input_specs()``
+provides precomputed frame embeddings ``[B, enc_seq, d_model]`` (the
+output the two-conv mel frontend would produce).  The frontend conv stack
+is still implemented (``audio_frontend_*``) for completeness and for the
+smoke test, but the shape cells feed embeddings directly.
+
+Encoder: bidirectional MHA + GELU MLP, sinusoidal positions, pre-LN.
+Decoder: causal self-attention (KV cache) + cross-attention over encoder
+output (cross K/V computed once at prefill and carried in the cache).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import layers as L
+
+
+def sinusoids(length: int, channels: int) -> jnp.ndarray:
+    """Whisper's sinusoidal position embedding."""
+    log_timescale = math.log(10000.0) / (channels // 2 - 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(channels // 2))
+    t = jnp.arange(length)[:, None].astype(jnp.float32) * inv[None]
+    return jnp.concatenate([jnp.sin(t), jnp.cos(t)], axis=1)
+
+
+def _mlp_init(key, d, d_ff, dt):
+    k1, k2 = jax.random.split(key)
+    return {"fc1": L.dense_init(k1, d, d_ff, dtype=dt),
+            "fc2": L.dense_init(k2, d_ff, d, dtype=dt)}
+
+
+def _mlp_apply(p, x, quant=None):
+    return L.dense_apply(p["fc2"], jax.nn.gelu(
+        L.dense_apply(p["fc1"], x, quant)), quant)
+
+
+# ---------------------------------------------------------- frontend ----
+
+def audio_frontend_init(key, cfg: ModelConfig, n_mels: int = 80) -> Dict:
+    k1, k2 = jax.random.split(key)
+    dt = jnp.dtype(cfg.dtype)
+    return {"conv1": L.conv1d_init(k1, n_mels, cfg.d_model, ksize=3,
+                                   dtype=dt),
+            "conv2": L.conv1d_init(k2, cfg.d_model, cfg.d_model, ksize=3,
+                                   dtype=dt)}
+
+
+def audio_frontend_apply(p: Dict, mel: jnp.ndarray) -> jnp.ndarray:
+    """mel [B, T_frames, n_mels] -> [B, T_frames//2, d_model]."""
+    x = jax.nn.gelu(L.conv1d_apply(p["conv1"], mel))
+    return jax.nn.gelu(L.conv1d_apply(p["conv2"], x, stride=2))
+
+
+# ------------------------------------------------------------- init -----
+
+def _enc_block_init(key, cfg: ModelConfig) -> Dict:
+    k1, k2 = jax.random.split(key)
+    dt = jnp.dtype(cfg.dtype)
+    return {"ln1": L.layernorm_init(cfg.d_model, dt),
+            "attn": A.attn_init(k1, cfg),
+            "ln2": L.layernorm_init(cfg.d_model, dt),
+            "mlp": _mlp_init(k2, cfg.d_model, cfg.d_ff, dt)}
+
+
+def _dec_block_init(key, cfg: ModelConfig) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = jnp.dtype(cfg.dtype)
+    return {"ln1": L.layernorm_init(cfg.d_model, dt),
+            "self_attn": A.attn_init(k1, cfg),
+            "ln_x": L.layernorm_init(cfg.d_model, dt),
+            "cross_attn": A.attn_init(k2, cfg),
+            "ln2": L.layernorm_init(cfg.d_model, dt),
+            "mlp": _mlp_init(k3, cfg.d_model, cfg.d_ff, dt)}
+
+
+def encdec_init(key, cfg: ModelConfig) -> Dict:
+    ke, kb, kd, kt = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    enc_keys = jax.random.split(kb, cfg.n_enc_layers)
+    dec_keys = jax.random.split(kd, cfg.n_layers)
+    return {
+        "enc_blocks": jax.vmap(lambda k: _enc_block_init(k, cfg))(enc_keys),
+        "enc_ln": L.layernorm_init(cfg.d_model, dt),
+        "tok_embed": L.embedding_init(kt, cfg.vocab_size, cfg.d_model, dt),
+        "dec_blocks": jax.vmap(lambda k: _dec_block_init(k, cfg))(dec_keys),
+        "dec_ln": L.layernorm_init(cfg.d_model, dt),
+    }
+
+
+# ------------------------------------------------------------ apply -----
+
+def encode(params: Dict, cfg: ModelConfig, frames: jnp.ndarray
+           ) -> jnp.ndarray:
+    """frames [B, S_enc, d] (stub embeddings) -> encoder states."""
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    x = x + sinusoids(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+
+    def layer(carry, blk):
+        h = L.layernorm_apply(blk["ln1"], carry, cfg.norm_eps)
+        a, _ = A.attn_apply(blk["attn"], cfg, h, causal=False, rope=False)
+        carry = carry + a
+        h = L.layernorm_apply(blk["ln2"], carry, cfg.norm_eps)
+        return carry + _mlp_apply(blk["mlp"], h), None
+
+    layer_fn = jax.checkpoint(layer) if cfg.remat else layer
+    x, _ = L.scan_blocks(layer_fn, x, params["enc_blocks"], cfg)
+    return L.layernorm_apply(params["enc_ln"], x, cfg.norm_eps)
+
+
+def _dec_block(blk: Dict, cfg: ModelConfig, x, enc_out, *,
+               cache: Optional[Dict] = None, cache_pos=None,
+               cross_kv=None) -> Tuple[jnp.ndarray, Optional[Dict], tuple]:
+    quant = cfg.quant if cfg.quant.enabled else None
+    h = L.layernorm_apply(blk["ln1"], x, cfg.norm_eps)
+    a, new_cache = A.attn_apply(blk["self_attn"], cfg, h, causal=True,
+                                rope=False, cache=cache,
+                                cache_pos=cache_pos)
+    x = x + a
+    h = L.layernorm_apply(blk["ln_x"], x, cfg.norm_eps)
+    if cross_kv is None:
+        ck = A._split_heads(L.dense_apply(blk["cross_attn"]["wk"], enc_out,
+                                          quant), cfg.n_kv_heads)
+        cv = A._split_heads(L.dense_apply(blk["cross_attn"]["wv"], enc_out,
+                                          quant), cfg.n_kv_heads)
+        cross_kv = (ck, cv)
+    ca, _ = A.attn_apply(blk["cross_attn"], cfg, h, cross_kv=cross_kv)
+    x = x + ca
+    h = L.layernorm_apply(blk["ln2"], x, cfg.norm_eps)
+    return x + _mlp_apply(blk["mlp"], h, quant), new_cache, cross_kv
+
+
+def encdec_forward(params: Dict, cfg: ModelConfig, frames: jnp.ndarray,
+                   tokens: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Training forward: (frames [B,S_enc,d], tokens [B,T]) -> logits."""
+    enc_out = encode(params, cfg, frames)
+    x = L.embedding_apply(params["tok_embed"], tokens)
+    x = x + sinusoids(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+
+    def layer(carry, blk):
+        y, _, _ = _dec_block(blk, cfg, carry, enc_out)
+        return y, None
+
+    layer_fn = jax.checkpoint(layer) if cfg.remat else layer
+    x, _ = L.scan_blocks(layer_fn, x, params["dec_blocks"], cfg)
+    x = L.layernorm_apply(params["dec_ln"], x, cfg.norm_eps)
+    return (L.unembed_apply(params["tok_embed"], x),
+            jnp.zeros((), jnp.float32))
+
+
+def encdec_init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    one = A.init_cache(cfg, batch, max_len)
+    self_cache = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape
+                                   ).copy(), one)
+    dt = jnp.dtype(cfg.dtype)
+    cross = jnp.zeros((cfg.n_layers, batch, cfg.enc_seq, cfg.n_kv_heads,
+                       cfg.kv_head_dim), dt)
+    return {"self": self_cache, "cross_k": cross, "cross_v": cross}
+
+
+def encdec_prefill(params: Dict, cfg: ModelConfig, frames: jnp.ndarray,
+                   tokens: jnp.ndarray, cache: Dict
+                   ) -> Tuple[jnp.ndarray, Dict]:
+    enc_out = encode(params, cfg, frames)
+    x = L.embedding_apply(params["tok_embed"], tokens)
+    x = x + sinusoids(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+
+    def layer(carry, xs):
+        blk, cache_l = xs
+        y, new_self, cross_kv = _dec_block(blk, cfg, carry, enc_out,
+                                           cache=cache_l, cache_pos=0)
+        return y, {"self": new_self, "ck": cross_kv[0], "cv": cross_kv[1]}
+
+    x, outs = L.scan_blocks(layer, x, (params["dec_blocks"], cache["self"]), cfg)
+    x = L.layernorm_apply(params["dec_ln"], x, cfg.norm_eps)
+    logits = L.unembed_apply(params["tok_embed"], x[:, -1:])[:, 0]
+    return logits, {"self": outs["self"], "cross_k": outs["ck"],
+                    "cross_v": outs["cv"]}
+
+
+def encdec_decode_step(params: Dict, cfg: ModelConfig, token: jnp.ndarray,
+                       pos, cache: Dict) -> Tuple[jnp.ndarray, Dict]:
+    x = L.embedding_apply(params["tok_embed"], token[:, None])
+    x = x + sinusoid_at(pos, cfg.d_model).astype(x.dtype)[None, None]
+
+    def layer(carry, xs):
+        blk, cache_l, ck, cv = xs
+        y, new_self, _ = _dec_block(blk, cfg, carry, None, cache=cache_l,
+                                    cache_pos=pos, cross_kv=(ck, cv))
+        return y, new_self
+
+    x, new_self = L.scan_blocks(
+        layer, x, (params["dec_blocks"], cache["self"],
+                   cache["cross_k"], cache["cross_v"]), cfg)
+    x = L.layernorm_apply(params["dec_ln"], x, cfg.norm_eps)
+    logits = L.unembed_apply(params["tok_embed"], x)[:, 0]
+    return logits, {"self": new_self, "cross_k": cache["cross_k"],
+                    "cross_v": cache["cross_v"]}
+
+
+def sinusoid_at(pos, channels: int) -> jnp.ndarray:
+    """Sinusoid row for one (possibly traced) absolute position."""
+    log_timescale = math.log(10000.0) / (channels // 2 - 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(channels // 2))
+    t = jnp.asarray(pos, jnp.float32) * inv
+    return jnp.concatenate([jnp.sin(t), jnp.cos(t)])

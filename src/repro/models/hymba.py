@@ -1,0 +1,273 @@
+"""Hymba (NVIDIA 2024): hybrid heads — parallel attention + SSM in every
+layer — arch ``hymba-1.5b``.
+
+Each layer splits into two parallel branches over the same normalized
+input: (a) GQA *attention heads* with a sliding window, (b) *mamba/SSD
+heads* (scalar-per-head decay linear attention, state size
+``cfg.ssm_state``) via the shared chunkwise engine.  Branch outputs are
+RMS-normalized and averaged (the paper's fusion), then the usual SwiGLU
+FFN follows.
+
+Deviations recorded in DESIGN.md: uniform sliding window (the paper keeps
+3 full-attention layers), no meta tokens; the SSD discretization uses the
+bounded (f, 1-f) leaky-integrator pair.
+
+Sub-quadratic story (long_500k): decode state = rolling window cache
+(W=cfg.sliding_window) + per-head SSM state — O(W + H·s·dv) per layer,
+independent of context length.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models.linear_scan import chunked_scan, recurrent_step
+
+_CHUNK = 256
+
+
+def _ssm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    h = cfg.n_heads
+    dv = cfg.d_model // h
+    return h, cfg.ssm_state, dv
+
+
+def hymba_block_init(key, cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    h, s, dv = _ssm_dims(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    return {
+        "ln1": L.rmsnorm_init(d, dt),
+        "attn": A.attn_init(ks[0], cfg),
+        "ssm": {
+            "wv": L.dense_init(ks[1], d, h * dv, bias=False, dtype=dt),
+            "conv": {"w": (jax.random.normal(ks[2], (cfg.conv_width,
+                                                     h * dv)) /
+                           math.sqrt(cfg.conv_width)).astype(dt)},
+            "wb": L.dense_init(ks[3], d, h * s, bias=False, dtype=dt),
+            "wc": L.dense_init(ks[4], d, h * s, bias=False, dtype=dt),
+            "wdt": L.dense_init(ks[5], d, h, bias=True, dtype=dt),
+            "dskip": jnp.ones((h, 1, 1), jnp.float32) * 0.5,
+            "wo": L.dense_init(ks[6], h * dv, d, bias=False, dtype=dt),
+        },
+        "norm_attn": L.rmsnorm_init(d, dt),
+        "norm_ssm": L.rmsnorm_init(d, dt),
+        "ln2": L.rmsnorm_init(d, dt),
+        "mlp": L.swiglu_init(ks[7], d, cfg.d_ff, dt),
+    }
+
+
+def _causal_conv(x, w, state=None):
+    wd = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], wd - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(wd))
+    return L.silu(out), xp[:, -(wd - 1):]
+
+
+def _ssm_proj(p: Dict, cfg: ModelConfig, hn: jnp.ndarray, conv_state=None):
+    h, s, dv = _ssm_dims(cfg)
+    b, t, _ = hn.shape
+    v = L.dense_apply(p["wv"], hn)
+    v, conv_state = _causal_conv(v, p["conv"]["w"], conv_state)
+    vh = v.reshape(b, t, h, dv).transpose(0, 2, 1, 3)          # [B,H,T,dv]
+    kb = L.dense_apply(p["wb"], hn).reshape(b, t, h, s
+                                            ).transpose(0, 2, 1, 3)
+    qc = L.dense_apply(p["wc"], hn).reshape(b, t, h, s
+                                            ).transpose(0, 2, 1, 3)
+    dt_pre = L.dense_apply(p["wdt"], hn).astype(jnp.float32)   # [B,T,H]
+    f = jax.nn.sigmoid(dt_pre + 3.0).transpose(0, 2, 1)        # [B,H,T]
+    return qc, kb / math.sqrt(s), vh, f, conv_state
+
+
+def _ssm_apply(p: Dict, cfg: ModelConfig, hn: jnp.ndarray) -> jnp.ndarray:
+    """Full-sequence SSD branch. hn [B,T,d] -> [B,T,d]."""
+    h, s, dv = _ssm_dims(cfg)
+    b, t, _ = hn.shape
+    q, k, v, f, _ = _ssm_proj(p, cfg, hn)
+    logf = jnp.log(f)
+    ig = 1.0 - f                                               # leaky pair
+    pad = -t % _CHUNK
+    if pad:
+        padt = lambda a: jnp.pad(a, [(0, 0)] * (a.ndim - 2) +
+                                 [(0, pad), (0, 0)])
+        q, k, v = padt(q), padt(k), padt(v)
+        logf = jnp.pad(logf, ((0, 0), (0, 0), (0, pad)))
+        ig = jnp.pad(ig, ((0, 0), (0, 0), (0, pad)))
+    y = chunked_scan(q, k, v, logf, ig, chunk=min(_CHUNK, q.shape[2]),
+                     normalize=False)[:, :, :t]
+    y = y + p["dskip"] * v[:, :, :t]                           # mamba D-skip
+    y = y.transpose(0, 2, 1, 3).reshape(b, t, h * dv)
+    return L.dense_apply(p["wo"], y.astype(hn.dtype))
+
+
+def hymba_block_apply(blk: Dict, cfg: ModelConfig, x: jnp.ndarray, *,
+                      impl: Optional[str] = None) -> Tuple[jnp.ndarray, None]:
+    """Training form (full sequence, no cache)."""
+    hn = L.rmsnorm_apply(blk["ln1"], x, cfg.norm_eps)
+    a, _ = A.attn_apply(blk["attn"], cfg, hn, causal=True,
+                        window=cfg.sliding_window, impl=impl)
+    m = _ssm_apply(blk["ssm"], cfg, hn)
+    fused = 0.5 * (L.rmsnorm_apply(blk["norm_attn"], a, cfg.norm_eps) +
+                   L.rmsnorm_apply(blk["norm_ssm"], m, cfg.norm_eps))
+    x = x + fused
+    hn = L.rmsnorm_apply(blk["ln2"], x, cfg.norm_eps)
+    x = x + L.swiglu_apply(blk["mlp"], hn,
+                           cfg.quant if cfg.quant.enabled else None)
+    return x, None
+
+
+# Stateful (prefill/decode) paths -----------------------------------------
+
+def ssm_state_init(cfg: ModelConfig, batch: int) -> Dict:
+    h, s, dv = _ssm_dims(cfg)
+    return {
+        "S": jnp.zeros((batch, h, s, dv), jnp.float32),
+        "n": jnp.zeros((batch, h, s), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, h * dv),
+                          jnp.dtype(cfg.dtype)),
+    }
+
+
+def hymba_cache_init(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    one = {"attn": A.init_cache(cfg, batch, max_len,
+                                window=cfg.sliding_window),
+           "ssm": ssm_state_init(cfg, batch)}
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape
+                                   ).copy(), one)
+
+
+def _ssm_state_update(p: Dict, cfg: ModelConfig, hn: jnp.ndarray,
+                      prev: Dict) -> Dict:
+    """Exact end-of-sequence state from a full-sequence input (prefill)."""
+    q, k, v, f, conv_state = _ssm_proj(p, cfg, hn, prev["conv"])
+    logf = jnp.log(f)
+    ig = (1.0 - f).astype(jnp.float32)
+    csum = jnp.cumsum(logf, axis=-1)
+    decay_out = jnp.exp(csum[..., -1:] - csum)
+    w = decay_out * ig
+    g_tot = jnp.exp(csum[..., -1])
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    S = g_tot[..., None, None] * prev["S"] + \
+        jnp.einsum("bht,bhts,bhtv->bhsv", w, kf, vf)
+    n = g_tot[..., None] * prev["n"] + jnp.einsum("bht,bhts->bhs", w, kf)
+    return {"S": S, "n": n, "conv": conv_state}
+
+
+def hymba_block_prefill(blk: Dict, cfg: ModelConfig, x: jnp.ndarray,
+                        cache: Dict) -> Tuple[jnp.ndarray, Dict]:
+    hn = L.rmsnorm_apply(blk["ln1"], x, cfg.norm_eps)
+    a, new_attn = A.attn_apply(blk["attn"], cfg, hn, causal=True,
+                               cache=cache["attn"], cache_pos=0,
+                               window=cfg.sliding_window)
+    m = _ssm_apply(blk["ssm"], cfg, hn)
+    new_ssm = _ssm_state_update(blk["ssm"], cfg, hn, cache["ssm"])
+    fused = 0.5 * (L.rmsnorm_apply(blk["norm_attn"], a, cfg.norm_eps) +
+                   L.rmsnorm_apply(blk["norm_ssm"], m, cfg.norm_eps))
+    x = x + fused
+    hn2 = L.rmsnorm_apply(blk["ln2"], x, cfg.norm_eps)
+    x = x + L.swiglu_apply(blk["mlp"], hn2)
+    return x, {"attn": new_attn, "ssm": new_ssm}
+
+
+def hymba_block_step(blk: Dict, cfg: ModelConfig, x: jnp.ndarray,
+                     cache: Dict, pos) -> Tuple[jnp.ndarray, Dict]:
+    """One decode step. x [B,1,d]."""
+    h, s, dv = _ssm_dims(cfg)
+    b = x.shape[0]
+    hn = L.rmsnorm_apply(blk["ln1"], x, cfg.norm_eps)
+    a, new_attn = A.attn_apply(blk["attn"], cfg, hn, causal=True,
+                               cache=cache["attn"], cache_pos=pos,
+                               window=cfg.sliding_window)
+    q, k, v, f, conv_state = _ssm_proj(blk["ssm"], cfg, hn,
+                                       cache["ssm"]["conv"])
+    qs, ks, vs = (t[:, :, 0].astype(jnp.float32) for t in (q, k, v))
+    fs = f[..., 0]
+    (S, n), y = recurrent_step((cache["ssm"]["S"], cache["ssm"]["n"]),
+                               qs, ks, vs, fs, 1.0 - fs, normalize=False)
+    y = y + blk["ssm"]["dskip"][:, 0] * vs
+    m = L.dense_apply(blk["ssm"]["wo"],
+                      y.reshape(b, 1, h * dv).astype(x.dtype))
+    fused = 0.5 * (L.rmsnorm_apply(blk["norm_attn"], a, cfg.norm_eps) +
+                   L.rmsnorm_apply(blk["norm_ssm"], m, cfg.norm_eps))
+    x = x + fused
+    hn2 = L.rmsnorm_apply(blk["ln2"], x, cfg.norm_eps)
+    x = x + L.swiglu_apply(blk["mlp"], hn2)
+    return x, {"attn": new_attn,
+               "ssm": {"S": S, "n": n, "conv": conv_state}}
+
+
+# ---------------------------------------------------------- full LM -----
+
+def hymba_init(key, cfg: ModelConfig) -> Dict:
+    ke, kb, ko = jax.random.split(key, 3)
+    dt = jnp.dtype(cfg.dtype)
+    layer_keys = jax.random.split(kb, cfg.n_layers)
+    blocks = jax.vmap(lambda k: hymba_block_init(k, cfg))(layer_keys)
+    return {
+        "embed": L.embedding_init(ke, cfg.vocab_size, cfg.d_model, dt),
+        "blocks": blocks,
+        "ln_f": L.rmsnorm_init(cfg.d_model, dt),
+        "unembed": L.dense_init(ko, cfg.d_model, cfg.vocab_size,
+                                bias=False, dtype=dt),
+    }
+
+
+def hymba_forward(params: Dict, cfg: ModelConfig, inputs: jnp.ndarray
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    x = L.embedding_apply(params["embed"], inputs) \
+        if jnp.issubdtype(inputs.dtype, jnp.integer) \
+        else inputs.astype(jnp.dtype(cfg.dtype))
+
+    def layer(carry, blk):
+        y, _ = hymba_block_apply(blk, cfg, carry)
+        return y, None
+
+    layer_fn = jax.checkpoint(layer) if cfg.remat else layer
+    x, _ = L.scan_blocks(layer_fn, x, params["blocks"], cfg)
+    x = L.rmsnorm_apply(params["ln_f"], x, cfg.norm_eps)
+    return (L.dense_apply(params["unembed"], x).astype(jnp.float32),
+            jnp.zeros((), jnp.float32))
+
+
+def hymba_prefill(params: Dict, cfg: ModelConfig, inputs: jnp.ndarray,
+                  cache: Dict) -> Tuple[jnp.ndarray, Dict]:
+    x = L.embedding_apply(params["embed"], inputs) \
+        if jnp.issubdtype(inputs.dtype, jnp.integer) \
+        else inputs.astype(jnp.dtype(cfg.dtype))
+
+    def layer(carry, xs):
+        blk, cache_l = xs
+        y, new_cache = hymba_block_prefill(blk, cfg, carry, cache_l)
+        return y, new_cache
+
+    x, new_cache = L.scan_blocks(layer, x, (params["blocks"], cache), cfg)
+    x = L.rmsnorm_apply(params["ln_f"], x, cfg.norm_eps)
+    return (L.dense_apply(params["unembed"], x[:, -1:]
+                          ).astype(jnp.float32)[:, 0], new_cache)
+
+
+def hymba_decode_step(params: Dict, cfg: ModelConfig, token: jnp.ndarray,
+                      pos, cache: Dict) -> Tuple[jnp.ndarray, Dict]:
+    x = L.embedding_apply(params["embed"], token[:, None]) \
+        if jnp.issubdtype(token.dtype, jnp.integer) \
+        else token[:, None, :].astype(jnp.dtype(cfg.dtype))
+
+    def layer(carry, xs):
+        blk, cache_l = xs
+        y, new_cache = hymba_block_step(blk, cfg, carry, cache_l, pos)
+        return y, new_cache
+
+    x, new_cache = L.scan_blocks(layer, x, (params["blocks"], cache), cfg)
+    x = L.rmsnorm_apply(params["ln_f"], x, cfg.norm_eps)
+    return (L.dense_apply(params["unembed"], x).astype(jnp.float32)[:, 0],
+            new_cache)

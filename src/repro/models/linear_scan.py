@@ -1,0 +1,138 @@
+"""Chunkwise scalar-decay linear attention — the shared recurrence engine.
+
+One primitive powers both sequence-mixing SSM families in the pool:
+
+* xLSTM's **mLSTM** (matrix memory ``S ∈ R^{dk×dv}`` per head, scalar
+  forget gate, normalizer state) — ``models/xlstm.py``.
+* Hymba's **mamba/SSD heads** (scalar-per-head input-dependent decay —
+  exactly the mamba-2 SSD structure) — ``models/hymba.py``.
+
+Recurrence (per head, t over time):
+    S_t = f_t · S_{t-1} + i_t · k_t v_tᵀ          (state  [dk, dv])
+    n_t = f_t · n_{t-1} + i_t · k_t               (normalizer [dk])
+    h_t = (q_tᵀ S_t) / max(|q_tᵀ n_t|, 1)
+
+with f_t ∈ (0,1) (sigmoid forget), i_t ∈ (0,1] (sigmoid input gate).
+Bounded gates keep every chunkwise ratio ``∏ f ≤ 1`` — no max-stabilizer
+needed (the deviation from xLSTM's exponential input gate is recorded in
+DESIGN.md).
+
+Forms:
+  * :func:`chunked_scan`    — within-chunk parallel (MXU matmuls) +
+    ``lax.scan`` across chunks: O(T·L) not O(T²); this is what the
+    train/prefill cells lower.
+  * :func:`recurrent_step`  — O(1) decode update for the serve cells
+    (``long_500k`` runs entirely on this).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_scan(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                 log_f: jnp.ndarray, i_gate: jnp.ndarray,
+                 chunk: int = 256,
+                 normalize: bool = True) -> jnp.ndarray:
+    """q,k [B,H,T,dk], v [B,H,T,dv], log_f,i_gate [B,H,T] -> [B,H,T,dv].
+
+    T must be a multiple of ``chunk`` (callers pad)."""
+    b, h, t, dk = q.shape
+    dv = v.shape[-1]
+    nc = t // chunk
+    resh = lambda x: x.reshape(b, h, nc, chunk, *x.shape[3:])
+    q_, k_, v_ = resh(q), resh(k), resh(v)
+    lf, ig = resh(log_f), resh(i_gate)
+
+    # within-chunk cumulative decay g_t = exp(cumsum log f) (g_0 uses f_0)
+    csum = jnp.cumsum(lf, axis=-1)                       # [B,H,nc,L]
+    g = jnp.exp(csum)                                    # ∏_{s<=t} f_s
+    g_total = jnp.exp(csum[..., -1:])                    # ∏ over chunk
+    # decay from position s (exclusive) to chunk end: g_total / g_s  (<=1)
+    decay_out = jnp.exp(csum[..., -1:] - csum)           # [B,H,nc,L]
+
+    # intra-chunk masked scores: score[t,s] = q_t·k_s * (g_t/g_s)*i_s, s<=t
+    # ratio = exp(csum_t - csum_s) for s<t; for s=t the k_s term carries
+    # its own i_s but no decay: handle via strict mask + diagonal.
+    qk = jnp.einsum("bhnld,bhnmd->bhnlm", q_, k_)        # [.., L, L]
+    lm = csum[..., :, None] - csum[..., None, :]         # log(g_t/g_s)
+    strict = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+    diag = jnp.eye(chunk, dtype=bool)
+    ratio = jnp.where(strict, jnp.exp(jnp.where(strict, lm, 0.0)), 0.0)
+    ratio = ratio + jnp.where(diag, 1.0, 0.0)
+    scores = qk * ratio * ig[..., None, :]               # i_s on key axis
+    intra = jnp.einsum("bhnlm,bhnmv->bhnlv", scores, v_)
+    intra_den = jnp.einsum("bhnlm,bhnm->bhnl", scores,
+                           jnp.ones_like(ig))
+
+    # inter-chunk: scan the chunk-end state across chunks (f32 state)
+    # state contribution of chunk n: sum_s decay_out_s * i_s * k_s v_s^T
+    kv_chunk = jnp.einsum("bhnl,bhnld,bhnlv->bhndv",
+                          (decay_out * ig).astype(jnp.float32),
+                          k_.astype(jnp.float32),
+                          v_.astype(jnp.float32))        # [B,H,nc,dk,dv]
+    kn_chunk = jnp.einsum("bhnl,bhnld->bhnd",
+                          (decay_out * ig).astype(jnp.float32),
+                          k_.astype(jnp.float32))
+
+    def body(carry, xs):
+        s_prev, n_prev = carry                           # [B,H,dk,dv],[B,H,dk]
+        kv_n, kn_n, gt = xs                              # gt: [B,H,1]
+        s_new = gt[..., None] * s_prev + kv_n
+        n_new = gt * n_prev + kn_n
+        return (s_new, n_new), (s_prev, n_prev)
+
+    s0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+    n0 = jnp.zeros((b, h, dk), jnp.float32)
+    xs = (kv_chunk.transpose(2, 0, 1, 3, 4), kn_chunk.transpose(2, 0, 1, 3),
+          g_total[..., 0].transpose(2, 0, 1)[..., None].astype(jnp.float32))
+    (_, _), (s_hist, n_hist) = jax.lax.scan(body, (s0, n0), xs)
+    s_hist = s_hist.transpose(1, 2, 0, 3, 4).astype(q.dtype)  # [B,H,nc,dk,dv]
+    n_hist = n_hist.transpose(1, 2, 0, 3).astype(q.dtype)     # [B,H,nc,dk]
+
+    inter = jnp.einsum("bhnl,bhnld,bhndv->bhnlv", g, q_, s_hist)
+    inter_den = jnp.einsum("bhnl,bhnld,bhnd->bhnl", g, q_, n_hist)
+
+    num = intra + inter
+    if normalize:
+        den = jnp.maximum(jnp.abs(intra_den + inter_den), 1.0)
+        num = num / den[..., None]
+    return num.reshape(b, h, t, dv).astype(q.dtype)
+
+
+def recurrent_step(state: Tuple[jnp.ndarray, jnp.ndarray],
+                   q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                   f: jnp.ndarray, i: jnp.ndarray,
+                   normalize: bool = True
+                   ) -> Tuple[Tuple[jnp.ndarray, jnp.ndarray], jnp.ndarray]:
+    """One decode step. state = (S [B,H,dk,dv], n [B,H,dk]);
+    q,k [B,H,dk], v [B,H,dv], f,i [B,H] -> (new_state, h [B,H,dv])."""
+    s, nrm = state
+    s_new = f[..., None, None] * s + i[..., None, None] * \
+        jnp.einsum("bhd,bhv->bhdv", k, v)
+    n_new = f[..., None] * nrm + i[..., None] * k
+    num = jnp.einsum("bhd,bhdv->bhv", q, s_new)
+    if normalize:
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n_new)), 1.0)
+        num = num / den[..., None]
+    return (s_new, n_new), num
+
+
+def reference_scan(q, k, v, log_f, i_gate, normalize: bool = True):
+    """O(T) sequential oracle for :func:`chunked_scan` (tests)."""
+    b, h, t, dk = q.shape
+    dv = v.shape[-1]
+
+    def body(carry, xs):
+        qt, kt, vt, ft, it = xs
+        carry, ht = recurrent_step(carry, qt, kt, vt, ft, it, normalize)
+        return carry, ht
+
+    xs = (q.transpose(2, 0, 1, 3), k.transpose(2, 0, 1, 3),
+          v.transpose(2, 0, 1, 3), jnp.exp(log_f).transpose(2, 0, 1),
+          i_gate.transpose(2, 0, 1))
+    s0 = (jnp.zeros((b, h, dk, dv), q.dtype), jnp.zeros((b, h, dk), q.dtype))
+    _, hs = jax.lax.scan(body, s0, xs)
+    return hs.transpose(1, 2, 0, 3)

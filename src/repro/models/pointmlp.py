@@ -1,0 +1,247 @@
+"""PointMLP-Elite / PointMLP-Lite (HLS4PC §3; Ma et al. 2022).
+
+Topology: conv1d embedding -> 4 stages of (local grouper [FPS|URS sample,
+KNN group, geometric-affine normalize], transfer ConvBNReLU, pre-extraction
+residual blocks on [B,S,k,C], max-pool over neighbors, pos-extraction
+residual blocks on [B,S,C]) -> global max-pool -> 3-layer MLP classifier.
+
+The compression ladder of Table 1 is expressed purely through
+:class:`PointMLPConfig` (input points, sampler, affine mode, BN fusion,
+quantization) — ``pointmlp_lite_config()`` is the paper's M-2 + 8/8 QAT.
+
+All convs are pointwise (1x1), i.e. matmuls — on the FPGA they are
+streaming MAC arrays; on TPU they hit the MXU, and the fused
+conv+BN+ReLU path uses ``repro.kernels.fused_linear``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import knn as knn_core
+from repro.core import sampling
+from repro.core.quant import QuantConfig
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class PointMLPConfig:
+    name: str = "pointmlp-elite"
+    n_points: int = 1024                  # N_input (Table 1 ladder)
+    n_classes: int = 40
+    embed_dim: int = 32
+    k_neighbors: int = 16                 # paper HW uses k=16
+    stage_expansion: Tuple[int, ...] = (2, 2, 2, 2)
+    pre_blocks: Tuple[int, ...] = (1, 1, 2, 1)
+    pos_blocks: Tuple[int, ...] = (1, 1, 2, 1)
+    res_expansion: float = 0.25           # Elite's slim residual bottleneck
+    sampler: str = "fps"                  # fps | urs
+    affine_mode: str = "affine"           # affine | norm (alpha/beta pruned)
+    use_bn: bool = True                   # False after fuse_tree()
+    quant: QuantConfig = QuantConfig(w_bits=32, a_bits=32)
+    bn_momentum: float = 0.9
+
+    @property
+    def stage_samples(self) -> Tuple[int, ...]:
+        # numSamp halves per stage: 1024 -> (512,256,128,64);
+        # 512 -> (256,128,64,32) exactly as §2.1.
+        return tuple(self.n_points // (2 ** (i + 1)) for i in range(4))
+
+    @property
+    def stage_dims(self) -> Tuple[int, ...]:
+        dims, d = [], self.embed_dim
+        for e in self.stage_expansion:
+            d *= e
+            dims.append(d)
+        return tuple(dims)
+
+    def replace(self, **kw) -> "PointMLPConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def pointmlp_elite_config(n_classes: int = 40) -> PointMLPConfig:
+    return PointMLPConfig(name="pointmlp-elite", n_classes=n_classes)
+
+
+def pointmlp_m2_config(n_classes: int = 40) -> PointMLPConfig:
+    """M-2 of Table 1: 512 points, URS, alpha/beta pruned, BN fused."""
+    return PointMLPConfig(name="pointmlp-m2", n_points=512, sampler="urs",
+                          affine_mode="norm", n_classes=n_classes)
+
+
+def pointmlp_lite_config(n_classes: int = 40) -> PointMLPConfig:
+    """PointMLP-Lite: M-2 + 8/8-bit QAT (Fig. 4 Pareto point)."""
+    return pointmlp_m2_config(n_classes).replace(
+        name="pointmlp-lite", quant=QuantConfig(w_bits=8, a_bits=8))
+
+
+# ------------------------------------------------------------- init -----
+
+def _cbr_init(key, c_in, c_out, cfg) -> Dict:
+    return L.conv1d_init(key, c_in, c_out, ksize=1, bias=True,
+                         bn=cfg.use_bn)
+
+
+def _res_block_init(key, c, cfg) -> Dict:
+    mid = max(1, int(c * cfg.res_expansion))
+    k1, k2 = jax.random.split(key)
+    return {"net1": _cbr_init(k1, c, mid, cfg),
+            "net2": _cbr_init(k2, mid, c, cfg)}
+
+
+def pointmlp_init(key, cfg: PointMLPConfig) -> Dict:
+    keys = jax.random.split(key, 64)
+    ki = iter(range(64))
+    params: Dict = {"embed": _cbr_init(keys[next(ki)], 3, cfg.embed_dim, cfg)}
+    c_prev = cfg.embed_dim
+    stages = []
+    for s in range(4):
+        c_out = cfg.stage_dims[s]
+        st: Dict = {}
+        if cfg.affine_mode == "affine":
+            st["affine"] = knn_core.geometric_affine_init(c_prev)
+        st["transfer"] = _cbr_init(keys[next(ki)], 2 * c_prev, c_out, cfg)
+        st["pre"] = [_res_block_init(keys[next(ki)], c_out, cfg)
+                     for _ in range(cfg.pre_blocks[s])]
+        st["pos"] = [_res_block_init(keys[next(ki)], c_out, cfg)
+                     for _ in range(cfg.pos_blocks[s])]
+        stages.append(st)
+        c_prev = c_out
+    params["stages"] = stages
+    k1, k2, k3 = (keys[next(ki)] for _ in range(3))
+    params["head"] = {
+        "fc1": _cbr_init(k1, c_prev, 512, cfg),
+        "fc2": _cbr_init(k2, 512, 256, cfg),
+        "fc3": L.conv1d_init(k3, 256, cfg.n_classes, ksize=1, bias=True,
+                             bn=False),
+    }
+    return params
+
+
+def count_conv_layers(cfg: PointMLPConfig) -> int:
+    return 1 + sum(1 + 2 * cfg.pre_blocks[s] + 2 * cfg.pos_blocks[s]
+                   for s in range(4))
+
+
+# ------------------------------------------------------------ apply -----
+
+def _cbr_apply(p: Dict, x: jnp.ndarray, cfg: PointMLPConfig, train: bool,
+               act: bool = True) -> Tuple[jnp.ndarray, Dict]:
+    """Conv(+BN)(+ReLU); in train mode BN uses batch stats and returns a
+    params dict with refreshed running stats (functional BN)."""
+    quant = cfg.quant if cfg.quant.enabled else None
+    y = L._matmul(x, p["w"], quant)
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    p_new = p
+    if "bn" in p:
+        bn = p["bn"]
+        if train:
+            red = tuple(range(y.ndim - 1))
+            mu = jnp.mean(y, axis=red)
+            var = jnp.var(y, axis=red)
+            m = cfg.bn_momentum
+            p_new = dict(p)
+            p_new["bn"] = {"gamma": bn["gamma"], "beta": bn["beta"],
+                           "mean": m * bn["mean"] + (1 - m) * mu,
+                           "var": m * bn["var"] + (1 - m) * var}
+        else:
+            mu, var = bn["mean"], bn["var"]
+        y = (y - mu) * jax.lax.rsqrt(var + 1e-5) * bn["gamma"] + bn["beta"]
+    if act:
+        y = jax.nn.relu(y)
+    return y, p_new
+
+
+def _res_apply(p: Dict, x, cfg, train) -> Tuple[jnp.ndarray, Dict]:
+    h, n1 = _cbr_apply(p["net1"], x, cfg, train)
+    h, n2 = _cbr_apply(p["net2"], h, cfg, train, act=False)
+    return jax.nn.relu(h + x), {"net1": n1, "net2": n2}
+
+
+def _sample_indices(cfg: PointMLPConfig, xyz: jnp.ndarray, n_samples: int,
+                    lfsr_state: Optional[jnp.ndarray]
+                    ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    b, n = xyz.shape[0], xyz.shape[1]
+    if cfg.sampler == "fps":
+        return sampling.fps_batched(xyz, n_samples), lfsr_state
+    assert lfsr_state is not None, "URS sampler needs an LFSR state"
+    new_state, idx = sampling.urs_indices_batched(
+        lfsr_state, n, n_samples, b)
+    return idx, new_state
+
+
+def pointmlp_apply(params: Dict, cfg: PointMLPConfig, xyz: jnp.ndarray,
+                   lfsr_state: Optional[jnp.ndarray] = None,
+                   train: bool = False
+                   ) -> Tuple[jnp.ndarray, Dict, Optional[jnp.ndarray]]:
+    """Forward pass.
+
+    Args:
+      xyz: [B, N, 3] point coordinates (N == cfg.n_points).
+      lfsr_state: uint32 [>=B] LFSR streams (URS sampler only).
+
+    Returns: (logits [B, n_classes], updated params (BN stats), lfsr state).
+    """
+    new_params = {k: v for k, v in params.items()}
+    feats, emb = _cbr_apply(params["embed"], xyz, cfg, train)   # [B,N,E]
+    new_params["embed"] = emb
+
+    cur_xyz, cur = xyz, feats
+    new_stages = []
+    for s, st in enumerate(params["stages"]):
+        n_samp = cfg.stage_samples[s]
+        idx, lfsr_state = _sample_indices(cfg, cur_xyz, n_samp, lfsr_state)
+        affine = st.get("affine")
+        cur_xyz, _, grouped = knn_core.group_points(
+            cur_xyz, cur, idx, cfg.k_neighbors, affine, cfg.affine_mode)
+        st_new = dict(st)
+        h, st_new["transfer"] = _cbr_apply(st["transfer"], grouped, cfg,
+                                           train)               # [B,S,k,C]
+        pre_new = []
+        for blk in st["pre"]:
+            h, b_new = _res_apply(blk, h, cfg, train)
+            pre_new.append(b_new)
+        st_new["pre"] = pre_new
+        h = jnp.max(h, axis=2)                                  # pool over k
+        pos_new = []
+        for blk in st["pos"]:
+            h, b_new = _res_apply(blk, h, cfg, train)
+            pos_new.append(b_new)
+        st_new["pos"] = pos_new
+        new_stages.append(st_new)
+        cur = h
+    new_params["stages"] = new_stages
+
+    g = jnp.max(cur, axis=1)                                    # [B, C]
+    head = params["head"]
+    h, f1 = _cbr_apply(head["fc1"], g, cfg, train)
+    h, f2 = _cbr_apply(head["fc2"], h, cfg, train)
+    logits = L.conv1d_apply(head["fc3"], h,
+                            quant=cfg.quant if cfg.quant.enabled else None)
+    new_params["head"] = {"fc1": f1, "fc2": f2, "fc3": head["fc3"]}
+    return logits, new_params, lfsr_state
+
+
+def pointmlp_flops(cfg: PointMLPConfig) -> int:
+    """Analytic MAC*2 count per sample (for GOPS derivations, Table 2/3)."""
+    fl = 0
+    n = cfg.n_points
+    fl += 2 * n * 3 * cfg.embed_dim
+    c_prev = cfg.embed_dim
+    for s in range(4):
+        smp, c = cfg.stage_samples[s], cfg.stage_dims[s]
+        k = cfg.k_neighbors
+        # knn distances: S x N x C MACs
+        fl += 2 * smp * n * 3
+        fl += 2 * smp * k * (2 * c_prev) * c                 # transfer
+        mid = max(1, int(c * cfg.res_expansion))
+        fl += cfg.pre_blocks[s] * 2 * smp * k * (c * mid + mid * c)
+        fl += cfg.pos_blocks[s] * 2 * smp * (c * mid + mid * c)
+        n, c_prev = smp, c
+    fl += 2 * (c_prev * 512 + 512 * 256 + 256 * cfg.n_classes)
+    return int(fl)

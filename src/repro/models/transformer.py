@@ -1,0 +1,207 @@
+"""Decoder-only LM: dense GQA + MoE variants (+ VLM/patch-stub inputs).
+
+Scale decisions (DESIGN.md §5):
+  * stacked per-layer params + ``lax.scan`` over layers — a 48-layer,
+    512-device SPMD program stays one-layer-sized in HLO;
+  * configurable remat (``cfg.remat``) around the scanned block;
+  * caches are stacked ``[L, B, S, Hkv, D]`` and scanned alongside params.
+
+Families served: yi-9b, tinyllama-1.1b, minitron-8b, llama3.2-1b (dense),
+moonshot-v1-16b-a3b, llama4-maverick-400b-a17b (moe),
+internvl2-26b (vlm — patch-embedding stub feeds the same backbone).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+
+
+# ------------------------------------------------------------- init -----
+
+def _block_init(key, cfg: ModelConfig) -> Dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    blk = {
+        "ln1": L.rmsnorm_init(cfg.d_model, dt),
+        "attn": A.attn_init(k1, cfg),
+        "ln2": L.rmsnorm_init(cfg.d_model, dt),
+    }
+    if cfg.n_experts > 0:
+        blk["moe"] = M.moe_init(k2, cfg)
+    else:
+        blk["mlp"] = L.swiglu_init(k3, cfg.d_model, cfg.d_ff, dt)
+    return blk
+
+
+def lm_init(key, cfg: ModelConfig) -> Dict:
+    ke, kb, ko = jax.random.split(key, 3)
+    dt = jnp.dtype(cfg.dtype)
+    layer_keys = jax.random.split(kb, cfg.n_layers)
+    blocks = jax.vmap(lambda k: _block_init(k, cfg))(layer_keys)
+    params = {
+        "embed": L.embedding_init(ke, cfg.vocab_size, cfg.d_model, dt),
+        "blocks": blocks,
+        "ln_f": L.rmsnorm_init(cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = L.dense_init(ko, cfg.d_model, cfg.vocab_size,
+                                         bias=False, dtype=dt)
+    return params
+
+
+# ------------------------------------------------------------ apply -----
+
+def _seq_parallel(x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Megatron-SP analogue under GSPMD: constrain the residual stream to
+    shard its sequence dim over `model`, converting the TP partial-sum
+    all-reduce into reduce-scatter + all-gather (half the wire bytes) and
+    sharding norm/residual compute and remat-saved activations 16-way."""
+    if not cfg.seq_parallel or x.ndim != 3:
+        return x
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(x, P(None, "model", None))
+
+
+def _gather_seq(h: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """SP companion constraint: un-shard the seq dim right before the
+    column-parallel matmuls (forces the all-gather HERE instead of letting
+    GSPMD replicate the matmul compute — EXPERIMENTS.md §Perf iter 1b)."""
+    if not cfg.seq_parallel or h.ndim != 3:
+        return h
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(h, P(None, None, None))
+
+
+def _block_apply(blk: Dict, cfg: ModelConfig, x: jnp.ndarray, *,
+                 q_offset=0, cache: Optional[Dict] = None,
+                 cache_pos=None, impl: Optional[str] = None
+                 ) -> Tuple[jnp.ndarray, Optional[Dict], jnp.ndarray]:
+    x = _seq_parallel(x, cfg)
+    h = _gather_seq(L.rmsnorm_apply(blk["ln1"], x, cfg.norm_eps), cfg)
+    a, new_cache = A.attn_apply(
+        blk["attn"], cfg, h, causal=True, q_offset=q_offset, cache=cache,
+        cache_pos=cache_pos, window=cfg.sliding_window, impl=impl)
+    x = _seq_parallel(x + a, cfg)
+    h = _gather_seq(L.rmsnorm_apply(blk["ln2"], x, cfg.norm_eps), cfg)
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in blk:
+        f, aux = M.moe_apply(blk["moe"], cfg, h)
+    else:
+        f = L.swiglu_apply(blk["mlp"], h,
+                           cfg.quant if cfg.quant.enabled else None)
+    return x + f, new_cache, aux
+
+
+def _embed_in(params: Dict, cfg: ModelConfig, inputs: jnp.ndarray
+              ) -> jnp.ndarray:
+    """Token ids [B,T] int -> embeddings; float [B,T,d] (vlm/audio stub
+    patch embeddings) pass straight through to the backbone."""
+    if jnp.issubdtype(inputs.dtype, jnp.integer):
+        return L.embedding_apply(params["embed"], inputs)
+    return inputs.astype(jnp.dtype(cfg.dtype))
+
+
+def _unembed(params: Dict, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.tie_embeddings or "unembed" not in params:
+        return L.unembed_apply(params["embed"], x)
+    return L.dense_apply(params["unembed"], x).astype(jnp.float32)
+
+
+def lm_forward(params: Dict, cfg: ModelConfig, inputs: jnp.ndarray,
+               impl: Optional[str] = None
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Training forward: inputs [B,T] ids (or [B,T,d] stub embeddings)
+    -> (logits [B,T,V] f32, moe aux loss)."""
+    x = _embed_in(params, cfg, inputs)
+
+    def layer(carry, blk):
+        y, _, aux = _block_apply(blk, cfg, carry, impl=impl)
+        return y, aux
+
+    layer_fn = jax.checkpoint(layer) if cfg.remat else layer
+    x, auxs = L.scan_blocks(layer_fn, x, params["blocks"], cfg)
+    x = L.rmsnorm_apply(params["ln_f"], x, cfg.norm_eps)
+    return _unembed(params, cfg, x), jnp.sum(auxs)
+
+
+def lm_loss(params: Dict, cfg: ModelConfig, batch: Dict,
+            aux_weight: float = 0.01) -> Tuple[jnp.ndarray, Dict]:
+    logits, aux = lm_forward(params, cfg, batch["tokens"])
+    ce = L.softmax_cross_entropy(logits, batch["labels"])
+    loss = ce + aux_weight * aux
+    return loss, {"loss": loss, "ce": ce, "moe_aux": aux}
+
+
+# ------------------------------------------------------ serve steps -----
+
+def lm_init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    one = A.init_cache(cfg, batch, max_len, window=cfg.sliding_window)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_layers,) + x.shape).copy(),
+        one)
+
+
+def lm_prefill(params: Dict, cfg: ModelConfig, inputs: jnp.ndarray,
+               cache: Dict, impl: Optional[str] = None
+               ) -> Tuple[jnp.ndarray, Dict]:
+    """Prefill: write the cache, return last-position logits [B,V]."""
+    x = _embed_in(params, cfg, inputs)
+
+    def layer(carry, xs):
+        blk, cache_l = xs
+        y, new_cache, _ = _block_apply(blk, cfg, carry, cache=cache_l,
+                                       cache_pos=0, impl=impl)
+        return y, new_cache
+
+    x, new_cache = L.scan_blocks(layer, x, (params["blocks"], cache), cfg)
+    x = L.rmsnorm_apply(params["ln_f"], x, cfg.norm_eps)
+    return _unembed(params, cfg, x[:, -1:])[:, 0], new_cache
+
+
+def lm_decode_step(params: Dict, cfg: ModelConfig, token: jnp.ndarray,
+                   pos: jnp.ndarray, cache: Dict,
+                   impl: Optional[str] = None
+                   ) -> Tuple[jnp.ndarray, Dict]:
+    """One token [B] (or stub embed [B,d]) at absolute position ``pos``
+    (scalar int32) -> (logits [B,V], new cache)."""
+    inp = token[:, None] if token.ndim == 1 else token[:, None, :]
+    x = _embed_in(params, cfg, inp)
+
+    def layer(carry, xs):
+        blk, cache_l = xs
+        y, new_cache, _ = _block_apply(blk, cfg, carry, cache=cache_l,
+                                       cache_pos=pos, impl=impl)
+        return y, new_cache
+
+    x, new_cache = L.scan_blocks(layer, x, (params["blocks"], cache), cfg)
+    x = L.rmsnorm_apply(params["ln_f"], x, cfg.norm_eps)
+    return _unembed(params, cfg, x)[:, 0], new_cache
+
+
+def param_count(params: Dict) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))
+
+
+def active_param_count(params: Dict, cfg: ModelConfig) -> int:
+    """MoE-aware: experts contribute k/E of their params (6·N_active·D
+    is the MODEL_FLOPS convention of §Roofline)."""
+    if cfg.n_experts == 0:
+        return param_count(params)
+    total = 0
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    frac = cfg.experts_per_token / cfg.n_experts
+    for path, leaf in flat:
+        keys = [getattr(p, "key", str(p)) for p in path]
+        if any(k in ("gate_w", "up_w", "down_w") for k in keys):
+            total += int(leaf.size * frac)
+        else:
+            total += leaf.size
+    return total

@@ -1,0 +1,78 @@
+"""Batched serving engine: continuous prefill + decode over a KV cache.
+
+The serving analogue of the FPGA's streaming pipeline: requests are
+batched, prefilled once, then decoded step-by-step with a persistent
+sharded cache.  Supports greedy and temperature sampling (LFSR-seeded —
+the deployment PRNG contract of the paper).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.api import ModelAPI
+
+
+@dataclasses.dataclass
+class ServeStats:
+    prefill_s: float
+    decode_s: float
+    tokens_out: int
+
+    @property
+    def decode_tok_per_s(self) -> float:
+        return self.tokens_out / max(self.decode_s, 1e-9)
+
+
+class Engine:
+    def __init__(self, api: ModelAPI, params, max_len: int,
+                 batch_size: int, temperature: float = 0.0, seed: int = 0):
+        self.api = api
+        self.params = params
+        self.max_len = max_len
+        self.batch = batch_size
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        self._prefill = jax.jit(api.prefill, donate_argnums=(2,))
+        self._decode = jax.jit(api.decode_step, donate_argnums=(2,))
+
+    def _sample(self, logits: jnp.ndarray) -> jnp.ndarray:
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, -1).astype(jnp.int32)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(sub, logits / self.temperature
+                                      ).astype(jnp.int32)
+
+    def generate(self, batch: Dict[str, jnp.ndarray], n_tokens: int,
+                 stop_token: Optional[int] = None
+                 ) -> Dict[str, object]:
+        """batch: prefill inputs (tokens [B,S] etc). Returns generated ids
+        [B, n_tokens] + stats."""
+        b = next(iter(batch.values())).shape[0]
+        prompt_len = batch["tokens"].shape[1]
+        cache = self.api.init_cache(b, self.max_len)
+        t0 = time.time()
+        logits, cache = self._prefill(self.params, batch, cache)
+        logits.block_until_ready()
+        t_prefill = time.time() - t0
+
+        out: List[jnp.ndarray] = []
+        tok = self._sample(logits)
+        t0 = time.time()
+        for i in range(n_tokens):
+            out.append(tok)
+            step_in = {"token": tok,
+                       "pos": jnp.asarray(prompt_len + i, jnp.int32)}
+            logits, cache = self._decode(self.params, step_in, cache)
+            tok = self._sample(logits)
+        jax.block_until_ready(tok)
+        t_decode = time.time() - t0
+        ids = jnp.stack(out, axis=1)
+        return {"ids": ids,
+                "stats": ServeStats(prefill_s=t_prefill, decode_s=t_decode,
+                                    tokens_out=b * n_tokens)}

@@ -1,0 +1,33 @@
+"""Distribution context: the active mesh, visible to model code.
+
+Model modules are mesh-agnostic except for explicitly-manual collectives
+(the shard_map MoE dispatch).  The step builders install the mesh here;
+``current_mesh()`` returns None on a bare host (tests / single device),
+in which case manual paths fall back to the GSPMD implementation.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+_MESH = None
+
+
+def set_mesh(mesh) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def current_mesh():
+    return _MESH
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    global _MESH
+    prev = _MESH
+    _MESH = mesh
+    try:
+        yield
+    finally:
+        _MESH = prev

@@ -1,0 +1,189 @@
+"""Logical-axis → mesh-axis sharding rules (the TPU analogue of HLS4PC's
+per-layer PE-count parametrization).
+
+Parameter shardings are derived from param-tree key paths; activations
+are constrained only at step boundaries (inputs, caches) and GSPMD
+propagates the rest.  ``profile`` selects a ruleset — per-arch overrides
+are the §Perf hillclimbing lever (``ModelConfig.sharding_profile``).
+
+Dims are matched from the END of the shape so stacked layer dims
+([L, ...] or [ng, mper, ...]) pass through unsharded.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def _spec(ndim: int, assign: Dict[int, Any], shape, mesh) -> P:
+    """assign: {dim (negative ok): axis or tuple}; drops non-divisible."""
+    out = [None] * ndim
+    for dim, axis in assign.items():
+        d = dim % ndim
+        if axis is None:
+            continue
+        if shape[d] % _axis_size(mesh, axis) == 0:
+            if isinstance(axis, tuple) and len(axis) == 1:
+                axis = axis[0]
+            out[d] = axis
+    return P(*out)
+
+
+# Weight-name classification: which logical dim is "model-sharded".
+_OUT_SHARDED = {"wq", "wk", "wv", "gate", "up", "wz", "wu", "fc1",
+                "wb", "wc", "unembed"}
+_IN_SHARDED = {"wo", "down", "fc2"}
+_EXPERT_SHARDED = {"gate_w", "up_w", "down_w"}
+_REPLICATED = {"router", "wdt", "wgate", "conv", "r", "dskip", "bn",
+               "alpha", "beta"}
+
+
+def param_pspec(path: Tuple, shape: Tuple[int, ...], mesh,
+                profile: str = "default") -> P:
+    keys = [getattr(p, "key", str(getattr(p, "name", p))) for p in path]
+    keys = [str(k) for k in keys]
+    ndim = len(shape)
+    model = "model" if "model" in mesh.axis_names else None
+    if model is None or ndim == 0:
+        return P()
+    name = keys[-1]
+    if name in ("q", "scale") and len(keys) >= 2:
+        # int8 export dict {q, scale} replaces the weight array: derive
+        # the spec from the enclosing weight name ("w"/"*_w")
+        keys = keys[:-1]
+        name = keys[-1]
+        if name == "scale":
+            pass
+    parents = set(keys[:-1])
+
+    if profile == "replicated":
+        return P()
+
+    if profile in ("fsdp", "infer2d"):
+        # ZeRO-3 / 2D inference: every big tensor fully sharded over all
+        # mesh axes on its largest-divisible dim; XLA inserts per-layer
+        # weight all-gathers (cheap vs activation all-reduce at large
+        # tokens/step) and grad reduce-scatters.
+        axes = tuple(a for a in ("pod", "data", "model")
+                     if a in mesh.axis_names)
+        if ndim >= 2:
+            # prefer the penultimate (input/vocab/expert) dim, fall back
+            # to the last
+            for dim in (-2, -1):
+                sp = _spec(ndim, {dim: axes}, shape, mesh)
+                if any(a is not None for a in sp):
+                    return sp
+            return P()
+        return _spec(ndim, {-1: axes}, shape, mesh)
+
+    # embedding / unembedding: shard the vocab dim
+    if name == "table":
+        return _spec(ndim, {-2: model}, shape, mesh)
+    if parents & _EXPERT_SHARDED or name in _EXPERT_SHARDED:
+        return _spec(ndim, {-3: model}, shape, mesh)    # [.., E, in, out]
+    if parents & _REPLICATED or name in _REPLICATED:
+        return P()
+    if name in ("w", "b") or name.endswith("_w"):
+        owner = keys[-2] if len(keys) >= 2 else ""
+        if owner in _OUT_SHARDED:
+            if name == "b":
+                return _spec(ndim, {-1: model}, shape, mesh)
+            return _spec(ndim, {-1: model}, shape, mesh)
+        if owner in _IN_SHARDED:
+            if name == "b":
+                return P()
+            return _spec(ndim, {-2: model}, shape, mesh)
+        if owner == "unembed":
+            return _spec(ndim, {-1: model}, shape, mesh)
+    return P()
+
+
+def params_shardings(params_or_shapes: Any, mesh,
+                     profile: str = "default") -> Any:
+    """Tree of NamedSharding matching a param (shape) tree."""
+    flat = jax.tree_util.tree_flatten_with_path(params_or_shapes)[0]
+    treedef = jax.tree_util.tree_structure(params_or_shapes)
+    out = [NamedSharding(mesh, param_pspec(path, leaf.shape, mesh, profile))
+           for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_pspec(mesh) -> Tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def full_axes(mesh) -> Tuple:
+    return tuple(a for a in ("pod", "data", "model")
+                 if a in mesh.axis_names)
+
+
+def batch_shardings(batch_specs: Any, mesh, profile: str = "default"
+                    ) -> Any:
+    """Shard the leading (global-batch) dim of every input leaf; drop the
+    assignment when not divisible (e.g. long_500k batch=1)."""
+    baxes = full_axes(mesh) if profile in ("fsdp", "infer2d") \
+        else batch_pspec(mesh)
+
+    def one(leaf):
+        shape = leaf.shape
+        if len(shape) == 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, _spec(len(shape), {0: baxes}, shape,
+                                         mesh))
+    return jax.tree_util.tree_map(one, batch_specs)
+
+
+def cache_pspec(path: Tuple, shape: Tuple[int, ...], mesh,
+                profile: str = "default") -> P:
+    """KV caches [L, B, S, Hkv, D]; recurrent states [L(, g), B, ...].
+    Shard batch over (pod, data) and the head dim over model when
+    divisible.  ``cache_seq`` profiles shard the SEQUENCE dim over model
+    instead (distributed-softmax attention reads: the per-layer gather
+    moves tiny logits, not half a GiB of K/V — §Perf decode iteration)."""
+    ndim = len(shape)
+    assign: Dict[int, Any] = {}
+    baxes = batch_pspec(mesh)
+    if ndim >= 4:
+        assign[-4] = baxes           # batch dim of [L,B,S,H,D]
+        if "cache_seq" in profile:
+            assign[-3] = "model"     # sequence dim
+        else:
+            assign[-2] = "model"     # kv heads
+    elif ndim >= 2:
+        assign[1] = baxes
+    return _spec(ndim, assign, shape, mesh)
+
+
+def cache_shardings(cache_tree: Any, mesh, profile: str = "default"
+                    ) -> Any:
+    flat = jax.tree_util.tree_flatten_with_path(cache_tree)[0]
+    treedef = jax.tree_util.tree_structure(cache_tree)
+    out = [NamedSharding(mesh, cache_pspec(path, leaf.shape, mesh,
+                                           profile))
+           for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def constrain_batch(x: jnp.ndarray, mesh, profile: str = "default"
+                    ) -> jnp.ndarray:
+    baxes = full_axes(mesh) if profile in ("fsdp", "infer2d") \
+        else batch_pspec(mesh)
+    spec = [None] * x.ndim
+    if x.ndim and x.shape[0] % _axis_size(mesh, baxes) == 0:
+        spec[0] = baxes
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

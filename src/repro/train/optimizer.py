@@ -1,0 +1,106 @@
+"""Optimizers (pure JAX ``(init, update)`` pairs) + the paper's schedule.
+
+HLS4PC §3 recipe: SGD, momentum 0.8, weight decay 2e-4, cosine annealing
+LR 0.1 → 0.005, batch 256 — used for PointMLP training/QAT.  AdamW is the
+default for the LM architectures.  Slots are f32 regardless of param
+dtype (bf16-safe).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+def cosine_lr(step: jnp.ndarray, cfg: TrainConfig) -> jnp.ndarray:
+    t = jnp.minimum(step.astype(jnp.float32) / max(cfg.steps, 1), 1.0)
+    return cfg.lr_min + 0.5 * (cfg.lr - cfg.lr_min) * \
+        (1.0 + jnp.cos(math.pi * t))
+
+
+def _f32_zeros_like(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+# --------------------------------------------------------------- SGD ----
+
+def sgd_init(params) -> Dict[str, Any]:
+    return {"momentum": _f32_zeros_like(params)}
+
+
+def sgd_update(grads, state, params, lr, cfg: TrainConfig
+               ) -> Tuple[Any, Dict[str, Any]]:
+    def upd(g, m, p):
+        g = g.astype(jnp.float32) + cfg.weight_decay * p.astype(jnp.float32)
+        m = cfg.momentum * m + g
+        return (p.astype(jnp.float32) - lr * m).astype(p.dtype), m
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["momentum"])
+    new = [upd(g, m, p) for g, m, p in zip(flat_g, flat_m, flat_p)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [a for a, _ in new])
+    new_m = jax.tree_util.tree_unflatten(treedef, [b for _, b in new])
+    return new_p, {"momentum": new_m}
+
+
+# ------------------------------------------------------------- AdamW ----
+
+def adamw_init(params) -> Dict[str, Any]:
+    return {"m": _f32_zeros_like(params), "v": _f32_zeros_like(params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(grads, state, params, lr, cfg: TrainConfig,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8
+                 ) -> Tuple[Any, Dict[str, Any]]:
+    count = state["count"] + 1
+    c = count.astype(jnp.float32)
+    corr1 = 1.0 - b1 ** c
+    corr2 = 1.0 - b2 ** c
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        step = (m / corr1) / (jnp.sqrt(v / corr2) + eps)
+        p32 = p.astype(jnp.float32)
+        p32 = p32 - lr * (step + cfg.weight_decay * p32)
+        return p32.astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    new = [upd(g, m, v, p)
+           for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    unf = lambda i: jax.tree_util.tree_unflatten(treedef,
+                                                 [t[i] for t in new])
+    return unf(0), {"m": unf(1), "v": unf(2), "count": count}
+
+
+def get_optimizer(cfg: TrainConfig):
+    if cfg.optimizer == "sgd":
+        return sgd_init, sgd_update
+    if cfg.optimizer == "adamw":
+        return adamw_init, adamw_update
+    raise ValueError(cfg.optimizer)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(x.astype(jnp.float32) ** 2)
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), \
+        norm

@@ -1,0 +1,139 @@
+"""Training loop: checkpoint/restart, straggler monitor, grad accumulation.
+
+The loop is deliberately dumb-robust (the part that must survive 1000+
+nodes):
+
+* resume = ``latest_step`` + deterministic data regeneration (no data
+  state beyond the step integer + LFSR states in the manifest);
+* per-step wall-time heartbeats feed a straggler monitor that flags hosts
+  whose step time exceeds ``straggler_factor`` x the running median — on
+  a real fleet this triggers the controller to drain the node; here it
+  logs (the decision logic is what's testable);
+* optional microbatch gradient accumulation (``TrainConfig.microbatch``)
+  via ``lax.scan`` inside the step — XLA overlaps each microbatch's
+  all-reduce with the next microbatch's backward (compute/comm overlap).
+"""
+from __future__ import annotations
+
+import collections
+import statistics
+import time
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.models.api import ModelAPI
+from repro.sharding import rules
+from repro.train import checkpoint as ckpt_lib
+from repro.train import optimizer as opt_lib
+
+
+class StragglerMonitor:
+    """Flags slow steps/hosts from heartbeat wall-times."""
+
+    def __init__(self, window: int = 50, factor: float = 2.0):
+        self.times = collections.deque(maxlen=window)
+        self.factor = factor
+        self.flagged = []
+
+    def record(self, step: int, dt: float) -> bool:
+        slow = False
+        if len(self.times) >= 10:
+            med = statistics.median(self.times)
+            slow = dt > self.factor * med
+            if slow:
+                self.flagged.append((step, dt, med))
+        self.times.append(dt)
+        return slow
+
+
+def build_accumulating_step(api: ModelAPI, mesh, tc: TrainConfig):
+    """train_step with optional microbatch accumulation."""
+    init_opt, update = opt_lib.get_optimizer(tc)
+
+    def train_step(params, opt_state, batch, step):
+        batch = {k: rules.constrain_batch(v, mesh) for k, v in batch.items()}
+        if tc.microbatch and tc.microbatch < tc.batch_size:
+            n_micro = tc.batch_size // tc.microbatch
+
+            def micro(g_acc, mb):
+                (_, m), g = jax.value_and_grad(api.loss_fn, has_aux=True)(
+                    params, mb)
+                return jax.tree_util.tree_map(jnp.add, g_acc, g), m
+
+            mbs = jax.tree_util.tree_map(
+                lambda x: x.reshape((n_micro, tc.microbatch) + x.shape[1:]),
+                batch)
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, ms = jax.lax.scan(micro, zeros, mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / n_micro, grads)
+            metrics = jax.tree_util.tree_map(lambda m: m[-1], ms)
+        else:
+            (_, metrics), grads = jax.value_and_grad(
+                api.loss_fn, has_aux=True)(params, batch)
+        grads, gnorm = opt_lib.clip_by_global_norm(grads, 1.0)
+        lr = opt_lib.cosine_lr(step, tc)
+        params, opt_state = update(grads, opt_state, params, lr, tc)
+        return params, opt_state, dict(metrics, grad_norm=gnorm, lr=lr)
+
+    return train_step, init_opt
+
+
+def fit(api: ModelAPI, mesh, tc: TrainConfig,
+        data: Iterator[Dict[str, jnp.ndarray]],
+        hooks: Optional[Dict[str, Callable]] = None,
+        log_every: int = 10) -> Dict[str, Any]:
+    """Run (or resume) training. Returns final state + history."""
+    hooks = hooks or {}
+    train_step, init_opt = build_accumulating_step(api, mesh, tc)
+    p_sh = None
+    start = ckpt_lib.latest_step(tc.checkpoint_dir)
+    params = api.init(jax.random.PRNGKey(tc.seed))
+    opt_state = init_opt(params)
+    if start is not None:
+        params, extra = ckpt_lib.restore(tc.checkpoint_dir, start, params)
+        opt_state, _ = ckpt_lib.restore(
+            tc.checkpoint_dir + "/opt", start, opt_state) \
+            if ckpt_lib.latest_step(tc.checkpoint_dir + "/opt") == start \
+            else (init_opt(params), {})
+        start_step = start
+    else:
+        start_step = 0
+
+    # data may be an iterator or a factory(start_step) -> iterator; the
+    # factory form gives bit-exact resume (data stream realigned to the
+    # restored step).
+    if callable(data) and not hasattr(data, "__next__"):
+        data = data(start_step)
+
+    jit_step = jax.jit(train_step, donate_argnums=(0, 1))
+    monitor = StragglerMonitor()
+    saver = ckpt_lib.AsyncCheckpointer(tc.checkpoint_dir)
+    opt_saver = ckpt_lib.AsyncCheckpointer(tc.checkpoint_dir + "/opt")
+    history = []
+    for step in range(start_step, tc.steps):
+        batch = next(data)
+        t0 = time.time()
+        params, opt_state, metrics = jit_step(
+            params, opt_state, batch, jnp.asarray(step, jnp.int32))
+        jax.block_until_ready(metrics["loss"])
+        dt = time.time() - t0
+        slow = monitor.record(step, dt)
+        if step % log_every == 0 or slow:
+            m = {k: float(v) for k, v in metrics.items()}
+            history.append({"step": step, "dt": dt, **m})
+            flag = " STRAGGLER" if slow else ""
+            print(f"step {step:6d} loss {m['loss']:.4f} "
+                  f"lr {m['lr']:.4f} {dt*1e3:.0f}ms{flag}", flush=True)
+        if "on_step" in hooks:
+            hooks["on_step"](step, params, metrics)
+        if tc.checkpoint_every and (step + 1) % tc.checkpoint_every == 0:
+            saver.save(step + 1, params, extra={"step": step + 1})
+            opt_saver.save(step + 1, opt_state)
+    saver.wait()
+    opt_saver.wait()
+    return {"params": params, "opt_state": opt_state, "history": history,
+            "stragglers": monitor.flagged}

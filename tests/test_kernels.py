@@ -1,0 +1,187 @@
+"""Per-kernel allclose contracts: Pallas (interpret mode) vs ref.py oracle,
+swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sampling
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.fps import fps_pallas, fps_update_pallas
+from repro.kernels.fused_linear import fused_linear_pallas
+from repro.kernels.int8_matmul import int8_matmul_pallas, w8_matmul_pallas
+from repro.kernels.knn import knn_pallas
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestKNNKernel:
+    @pytest.mark.parametrize("s,n,c,k", [
+        (16, 64, 3, 4), (100, 300, 3, 8), (128, 512, 16, 16),
+        (33, 257, 3, 16), (256, 1024, 3, 16),
+    ])
+    def test_matches_ref(self, s, n, c, k):
+        k1, k2 = jax.random.split(jax.random.fold_in(KEY, s * n))
+        samples = jax.random.normal(k1, (s, c))
+        points = jax.random.normal(k2, (n, c))
+        got = knn_pallas(samples, points, k)
+        want = ref.knn_ref(samples, points, k)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        k1, k2 = jax.random.split(KEY)
+        samples = jax.random.normal(k1, (32, 3)).astype(dtype)
+        points = jax.random.normal(k2, (128, 3)).astype(dtype)
+        got = knn_pallas(samples, points, 8)
+        want = ref.knn_ref(samples.astype(jnp.float32),
+                           points.astype(jnp.float32), 8)
+        # bf16 distance ties can reorder equidistant far neighbors;
+        # require the nearest half to agree exactly
+        np.testing.assert_array_equal(np.asarray(got)[:, :4],
+                                      np.asarray(want)[:, :4])
+
+    def test_selection_order_ascending(self):
+        k1, k2 = jax.random.split(KEY)
+        s = jax.random.normal(k1, (8, 3))
+        p = jax.random.normal(k2, (64, 3))
+        idx = np.asarray(knn_pallas(s, p, 8))
+        d = np.asarray(jnp.sum((s[:, None] - p[None]) ** 2, -1))
+        for i in range(8):
+            picked = d[i, idx[i]]
+            assert (np.diff(picked) >= -1e-6).all()
+
+
+class TestFPSKernel:
+    @pytest.mark.parametrize("n,s", [(64, 8), (257, 32), (1024, 128)])
+    def test_full_fps_matches_ref(self, n, s):
+        pts = jax.random.normal(jax.random.fold_in(KEY, n), (n, 3))
+        got = fps_pallas(pts, s)
+        want = sampling.fps(pts, s)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_update_step(self):
+        pts = jax.random.normal(KEY, (100, 3))
+        dists = jnp.abs(jax.random.normal(KEY, (100,))) + 0.5
+        nd = fps_update_pallas(pts.T, pts[7], dists[None])
+        want, _ = ref.fps_update_ref(pts, pts[7], dists)
+        np.testing.assert_allclose(np.asarray(nd[0]), np.asarray(want),
+                                   rtol=1e-5, atol=1e-6)
+
+
+class TestInt8Matmul:
+    @pytest.mark.parametrize("m,k,n", [
+        (16, 32, 8), (128, 128, 128), (50, 70, 90), (200, 300, 130),
+    ])
+    def test_matches_ref(self, m, k, n):
+        kk = jax.random.fold_in(KEY, m * k * n)
+        k1, k2, k3 = jax.random.split(kk, 3)
+        xq = jax.random.randint(k1, (m, k), -128, 128, jnp.int8)
+        wq = jax.random.randint(k2, (k, n), -128, 128, jnp.int8)
+        sc = jnp.abs(jax.random.normal(k3, (1, n))) * 0.01
+        got = int8_matmul_pallas(xq, wq, sc)
+        want = ref.int8_matmul_ref(xq, wq, sc)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_scalar_scale(self):
+        k1, k2 = jax.random.split(KEY)
+        xq = jax.random.randint(k1, (32, 64), -128, 128, jnp.int8)
+        wq = jax.random.randint(k2, (64, 32), -128, 128, jnp.int8)
+        sc = jnp.array([[0.02]], jnp.float32)
+        got = int8_matmul_pallas(xq, wq, sc)
+        want = ref.int8_matmul_ref(xq, wq, sc)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("m,k,n", [(33, 65, 129), (128, 256, 64)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_w8a16_matches_ref(self, m, k, n, dtype):
+        kk = jax.random.fold_in(KEY, m + k + n)
+        k1, k2, k3 = jax.random.split(kk, 3)
+        x = jax.random.normal(k1, (m, k)).astype(dtype)
+        wq = jax.random.randint(k2, (k, n), -128, 128, jnp.int8)
+        sc = (jnp.abs(jax.random.normal(k3, (1, n))) * 0.01 + 1e-3)
+        got = w8_matmul_pallas(x, wq, sc)
+        # oracle at f32: the kernel keeps an f32 VMEM accumulator + f32
+        # scales (TPU semantics), so it is *more* accurate than a pure
+        # bf16 matmul; compare both against the f32 truth with
+        # per-K-tile accumulation-order slack
+        want = ref.w8_matmul_ref(x.astype(jnp.float32), wq, sc)
+        tol = (5e-4, 5e-4) if dtype == jnp.float32 else (2e-2, 0.5)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=tol[0], atol=tol[1])
+
+
+class TestFusedLinear:
+    @pytest.mark.parametrize("act", ["relu", "gelu", "none"])
+    @pytest.mark.parametrize("m,k,n", [(32, 48, 24), (130, 70, 250)])
+    def test_matches_ref(self, act, m, k, n):
+        kk = jax.random.fold_in(KEY, m + 7 * n)
+        k1, k2, k3 = jax.random.split(kk, 3)
+        x = jax.random.normal(k1, (m, k))
+        w = jax.random.normal(k2, (k, n)) * 0.1
+        b = jax.random.normal(k3, (n,))
+        got = fused_linear_pallas(x, w, b, activation=act)
+        want = ref.fused_linear_ref(x, w, b, act)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_bn_fused_equals_conv_bn_relu(self):
+        """End-to-end paper path: fold BN, run the fused kernel, compare
+        against unfused conv->BN->ReLU."""
+        from repro.core import fusion as F
+        k1, k2 = jax.random.split(KEY)
+        w = jax.random.normal(k1, (24, 16)) * 0.2
+        b = jnp.zeros((16,))
+        bn = {"gamma": jnp.abs(jax.random.normal(k2, (16,))) + 0.5,
+              "beta": jax.random.normal(k1, (16,)) * 0.1,
+              "mean": jax.random.normal(k2, (16,)) * 0.1,
+              "var": jnp.abs(jax.random.normal(k1, (16,))) + 0.5}
+        x = jax.random.normal(k2, (40, 24))
+        want = jax.nn.relu(F.batchnorm_apply(x @ w + b, bn))
+        wf, bf = F.fuse_conv_bn(w, b, bn)
+        got = fused_linear_pallas(x, wf, bf, activation="relu")
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-5)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("tq,tk,causal,window", [
+        (128, 128, True, 0), (200, 200, True, 0), (64, 256, True, 0),
+        (200, 200, False, 0), (200, 200, True, 64), (1, 200, True, 0),
+    ])
+    def test_matches_ref(self, tq, tk, causal, window):
+        kk = jax.random.fold_in(KEY, tq * 7 + tk + window)
+        k1, k2, k3 = jax.random.split(kk, 3)
+        q = jax.random.normal(k1, (2, 8, tq, 64))
+        k = jax.random.normal(k2, (2, 2, tk, 64))
+        v = jax.random.normal(k3, (2, 2, tk, 64))
+        got = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                     tq=64, tk=64)
+        want = ref.attention_ref(q, k, v, causal=causal,
+                                 sliding_window=window)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_bf16(self):
+        k1, k2, k3 = jax.random.split(KEY, 3)
+        q = jax.random.normal(k1, (1, 4, 128, 32)).astype(jnp.bfloat16)
+        k = jax.random.normal(k2, (1, 4, 128, 32)).astype(jnp.bfloat16)
+        v = jax.random.normal(k3, (1, 4, 128, 32)).astype(jnp.bfloat16)
+        got = flash_attention_pallas(q, k, v, tq=64, tk=64)
+        want = ref.attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=5e-2, atol=5e-2)
+
+    def test_mha_no_gqa(self):
+        k1, k2, k3 = jax.random.split(KEY, 3)
+        q = jax.random.normal(k1, (2, 4, 96, 32))
+        k = jax.random.normal(k2, (2, 4, 96, 32))
+        v = jax.random.normal(k3, (2, 4, 96, 32))
+        got = flash_attention_pallas(q, k, v, tq=32, tk=32)
+        want = ref.attention_ref(q, k, v)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-3, atol=2e-3)

@@ -1,0 +1,165 @@
+"""Per-arch smoke tests (reduced configs) + cross-mode consistency.
+
+Every assigned architecture: one forward + one train step on CPU with
+asserted output shapes and finite values; prefill == forward; decode ==
+forward-on-extended-sequence (exact for deterministic archs, capacity-
+relaxed for MoE)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_smoke_config, list_archs
+from repro.configs.base import TrainConfig
+from repro.models.api import get_model
+from repro.train import optimizer as opt_lib
+
+KEY = jax.random.PRNGKey(0)
+ARCHS = list_archs()
+
+
+def make_batch(cfg, b=2, s=24, with_labels=True):
+    toks = jax.random.randint(KEY, (b, s), 0, cfg.vocab_size)
+    if cfg.family == "audio":
+        batch = {"frames": jax.random.normal(KEY, (b, cfg.enc_seq,
+                                                   cfg.d_model)),
+                 "tokens": toks}
+    elif cfg.frontend == "patch_stub":
+        batch = {"tokens": jax.random.normal(KEY, (b, s, cfg.d_model))}
+    else:
+        batch = {"tokens": toks}
+    if with_labels:
+        batch["labels"] = jax.random.randint(KEY, (b, s), 0,
+                                             cfg.vocab_size)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+class TestArchSmoke:
+    def test_forward_shapes_and_finite(self, arch):
+        cfg = get_smoke_config(arch)
+        api = get_model(cfg)
+        params = api.init(KEY)
+        batch = make_batch(cfg, with_labels=False)
+        inp = batch if cfg.family == "audio" else batch["tokens"]
+        logits, aux = api.forward(params, inp)
+        assert logits.shape == (2, 24, cfg.vocab_size)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_one_train_step(self, arch):
+        cfg = get_smoke_config(arch)
+        api = get_model(cfg)
+        params = api.init(KEY)
+        tc = TrainConfig(optimizer="sgd", lr=0.01, steps=10)
+        batch = make_batch(cfg)
+        (loss, metrics), grads = jax.value_and_grad(
+            api.loss_fn, has_aux=True)(params, batch)
+        assert bool(jnp.isfinite(loss))
+        gnorm = opt_lib.global_norm(grads)
+        assert bool(jnp.isfinite(gnorm)) and float(gnorm) > 0
+        new_params, _ = opt_lib.sgd_update(grads, opt_lib.sgd_init(params),
+                                           params, 0.01, tc)
+        # parameters actually moved
+        moved = jax.tree_util.tree_map(
+            lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32) -
+                                               b.astype(jnp.float32)))),
+            params, new_params)
+        assert max(jax.tree_util.tree_leaves(moved)) > 0
+
+    def test_full_config_matches_assignment(self, arch):
+        """The exact published numbers from the assignment table."""
+        cfg = get_config(arch)
+        expected = {
+            "whisper-tiny": (4, 384, 6, 6, 1536, 51865),
+            "moonshot-v1-16b-a3b": (48, 2048, 16, 16, 1408, 163840),
+            "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+            "yi-9b": (48, 4096, 32, 4, 11008, 64000),
+            "tinyllama-1.1b": (22, 2048, 32, 4, 5632, 32000),
+            "minitron-8b": (32, 4096, 32, 8, 16384, 256000),
+            "llama3.2-1b": (16, 2048, 32, 8, 8192, 128256),
+            "internvl2-26b": (48, 6144, 48, 8, 16384, 92553),
+            "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+            "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+        }[arch]
+        got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+               cfg.d_ff, cfg.vocab_size)
+        assert got == expected
+        if arch == "moonshot-v1-16b-a3b":
+            assert (cfg.n_experts, cfg.experts_per_token) == (64, 6)
+        if arch == "llama4-maverick-400b-a17b":
+            assert (cfg.n_experts, cfg.experts_per_token) == (128, 1)
+        if arch == "hymba-1.5b":
+            assert cfg.ssm_state == 16
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_matches_forward(arch):
+    cfg = get_smoke_config(arch).replace(remat=False, dtype="float32")
+    api = get_model(cfg)
+    params = api.init(KEY)
+    batch = make_batch(cfg, with_labels=False)
+    inp = batch if cfg.family == "audio" else batch["tokens"]
+    cache = api.init_cache(2, 48)
+    lp, _ = api.prefill(params, batch, cache)
+    lf, _ = api.forward(params, inp)
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(lf[:, -1]),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCHS
+                                  if get_config(a).frontend != "patch_stub"])
+def test_decode_matches_forward(arch):
+    """Greedy decode one token; logits must match a fresh forward pass on
+    the extended sequence (MoE: with ample capacity so nothing drops)."""
+    cfg = get_smoke_config(arch).replace(remat=False, dtype="float32",
+                                         capacity_factor=16.0)
+    api = get_model(cfg)
+    params = api.init(KEY)
+    b, s = 2, 24
+    batch = make_batch(cfg, b, s, with_labels=False)
+    cache = api.init_cache(b, 48)
+    lp, cache = api.prefill(params, batch, cache)
+    tok = jnp.argmax(lp, -1).astype(jnp.int32)
+    ld, _ = api.decode_step(params, {"token": tok,
+                                     "pos": jnp.array(s, jnp.int32)}, cache)
+    ext = jnp.concatenate([batch["tokens"], tok[:, None]], 1) \
+        if cfg.family != "audio" else None
+    if cfg.family == "audio":
+        lf, _ = api.forward(params, {"frames": batch["frames"],
+                                     "tokens": jnp.concatenate(
+                                         [batch["tokens"], tok[:, None]], 1)})
+    else:
+        lf, _ = api.forward(params, ext)
+    np.testing.assert_allclose(np.asarray(ld), np.asarray(lf[:, -1]),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_unroll_layers_equivalent():
+    """unroll_layers (dry-run costing mode) must not change the math."""
+    cfg = get_smoke_config("tinyllama-1.1b").replace(dtype="float32",
+                                                     remat=False)
+    api = get_model(cfg)
+    params = api.init(KEY)
+    toks = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)
+    l1, _ = api.forward(params, toks)
+    api2 = get_model(cfg.replace(unroll_layers=True))
+    l2, _ = api2.forward(params, toks)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_sliding_window_restricts_context():
+    """hymba attention: a token beyond the window must not influence the
+    current logits through the attention branch (state branch may carry
+    information — so test attention in isolation)."""
+    from repro.models import attention as A
+    cfg = get_smoke_config("hymba-1.5b").replace(dtype="float32")
+    p = A.attn_init(KEY, cfg)
+    x = jax.random.normal(KEY, (1, 40, cfg.d_model))
+    y1, _ = A.attn_apply(p, cfg, x, causal=True, window=8)
+    x2 = x.at[:, 0].set(x[:, 0] + 100.0)     # outside window of pos 39
+    y2, _ = A.attn_apply(p, cfg, x2, causal=True, window=8)
+    np.testing.assert_allclose(np.asarray(y1[:, -1]), np.asarray(y2[:, -1]),
+                               rtol=1e-4, atol=1e-4)
+    # ...but it must influence positions inside its window
+    assert not np.allclose(np.asarray(y1[:, 3]), np.asarray(y2[:, 3]))

@@ -1,0 +1,123 @@
+"""End-to-end behaviour of the paper's system: PointMLP + the full
+compression pipeline (URS swap, alpha/beta pruning, BN fusion, 8/8 QAT,
+int8 deploy) on the synthetic benchmark."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compress as CP
+from repro.core import sampling
+from repro.core.quant import QuantConfig
+from repro.data import pointclouds
+from repro.models import pointmlp as PM
+
+KEY = jax.random.PRNGKey(0)
+
+
+def tiny(cfg: PM.PointMLPConfig) -> PM.PointMLPConfig:
+    return cfg.replace(n_points=128, embed_dim=16, n_classes=8,
+                       k_neighbors=8)
+
+
+class TestPointMLP:
+    def test_elite_conv_count_matches_paper_topology(self):
+        """Table 2: 24 conv + 3 MLP. Our parametrization gives 25 conv
+        (pre/pos blocks (1,1,2,1)); the head has exactly 3 MLP layers."""
+        cfg = PM.pointmlp_elite_config()
+        assert PM.count_conv_layers(cfg) == 25
+        p = PM.pointmlp_init(KEY, tiny(cfg))
+        assert set(p["head"]) == {"fc1", "fc2", "fc3"}
+
+    def test_stage_samples_match_paper(self):
+        """§2.1: numSamp in {256,128,64,32} for the 512-point Lite."""
+        assert PM.pointmlp_lite_config().stage_samples == (256, 128, 64, 32)
+        assert PM.pointmlp_elite_config().stage_samples == \
+            (512, 256, 128, 64)
+
+    @pytest.mark.parametrize("maker", [PM.pointmlp_elite_config,
+                                       PM.pointmlp_m2_config,
+                                       PM.pointmlp_lite_config])
+    def test_forward_all_variants(self, maker):
+        cfg = tiny(maker(8))
+        params = PM.pointmlp_init(KEY, cfg)
+        pts, _ = pointclouds.make_batch(KEY, cfg.n_points, 4)
+        lfsr = sampling.seed_streams(0, 8)
+        logits, _, _ = PM.pointmlp_apply(params, cfg, pts, lfsr)
+        assert logits.shape == (4, 8)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_urs_deterministic_given_state(self):
+        cfg = tiny(PM.pointmlp_lite_config(8))
+        params = PM.pointmlp_init(KEY, cfg)
+        pts, _ = pointclouds.make_batch(KEY, cfg.n_points, 2)
+        l1, _, s1 = PM.pointmlp_apply(params, cfg, pts,
+                                      sampling.seed_streams(9, 4))
+        l2, _, s2 = PM.pointmlp_apply(params, cfg, pts,
+                                      sampling.seed_streams(9, 4))
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+        np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+
+    def test_training_reduces_loss(self):
+        """A few SGD steps on the synthetic set must reduce loss — the
+        system learns (miniature of the paper's training loop)."""
+        from repro.models.layers import softmax_cross_entropy
+        cfg = tiny(PM.pointmlp_lite_config(8)).replace(
+            quant=QuantConfig(w_bits=32, a_bits=32))
+        params = PM.pointmlp_init(KEY, cfg)
+        lfsr = sampling.seed_streams(0, 16)
+
+        def loss_fn(p, pts, cls, lf):
+            logits, p_new, lf = PM.pointmlp_apply(p, cfg, pts, lf,
+                                                  train=True)
+            return softmax_cross_entropy(logits, cls), (p_new, lf)
+
+        @jax.jit
+        def step(p, pts, cls, lf):
+            (l, (p_new, lf)), g = jax.value_and_grad(
+                loss_fn, has_aux=True)(p, pts, cls, lf)
+            p2 = jax.tree_util.tree_map(lambda a, b: a - 0.02 * b, p, g)
+            # keep refreshed BN stats from p_new where params untouched
+            return l, p2, lf
+
+        losses = []
+        for s in range(20):
+            pts, cls = pointclouds.make_batch(jax.random.fold_in(KEY, s),
+                                              cfg.n_points, 16)
+            l, params, lfsr = step(params, pts, cls, lfsr)
+            losses.append(float(l))
+        assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.05, losses
+
+    def test_compress_pipeline(self):
+        """fuse + int8 export: ~4x size cut, logits stay close (Fig. 4)."""
+        cfg = tiny(PM.pointmlp_lite_config(8))
+        params = PM.pointmlp_init(KEY, cfg)
+        pts, _ = pointclouds.make_batch(KEY, cfg.n_points, 4)
+        lfsr = sampling.seed_streams(3, 8)
+        # reference: fp32 path with BN, no quant
+        ref_cfg = cfg.replace(quant=QuantConfig(w_bits=32, a_bits=32))
+        ref_logits, _, _ = PM.pointmlp_apply(params, ref_cfg, pts, lfsr)
+
+        deploy, dcfg, report = CP.compress(params, cfg)
+        assert report.bn_blocks_fused > 0
+        assert report.size_ratio_vs_f32 > 3.0
+        got, _, _ = PM.pointmlp_apply(deploy, dcfg, pts,
+                                      sampling.seed_streams(3, 8))
+        assert bool(jnp.all(jnp.isfinite(got)))
+        # top-1 agreement between fp32 and deployed int8 on most samples
+        agree = float(jnp.mean((jnp.argmax(got, -1) ==
+                                jnp.argmax(ref_logits, -1))))
+        assert agree >= 0.5
+
+    def test_ladder_configs(self):
+        names = [c.name for c in CP.compression_ladder(8)]
+        assert names == ["pointmlp-elite", "M-1", "M-2", "M-3", "M-4",
+                         "pointmlp-lite"]
+        assert [c.n_points for c in CP.compression_ladder(8)] == \
+            [1024, 1024, 512, 256, 128, 512]
+
+    def test_flops_scale_with_input_points(self):
+        """The 4x complexity cut headline: Lite (512, int8) vs Elite."""
+        elite = PM.pointmlp_flops(PM.pointmlp_elite_config())
+        m2 = PM.pointmlp_flops(PM.pointmlp_m2_config())
+        assert 1.7 < elite / m2 < 2.6      # halving points ~halves MACs

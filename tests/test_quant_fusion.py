@@ -1,0 +1,107 @@
+"""Quantization + BN-fusion invariants (HLS4PC §2.2, Fig. 4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fusion as F
+from repro.core import quant as Q
+
+
+class TestFakeQuant:
+    @given(bits=st.sampled_from([4, 6, 8, 16]),
+           seed=st.integers(0, 1000))
+    @settings(max_examples=25, deadline=None)
+    def test_error_bounded_by_half_scale(self, bits, seed):
+        x = jax.random.normal(jax.random.PRNGKey(seed), (64, 32))
+        scale = Q.compute_scale(x, bits)
+        y = Q.fake_quant(x, bits)
+        assert float(jnp.max(jnp.abs(y - x))) <= float(scale) * 0.5 + 1e-6
+
+    def test_32bit_identity(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (8, 8))
+        np.testing.assert_array_equal(np.asarray(Q.fake_quant(x, 32)),
+                                      np.asarray(x))
+
+    def test_ste_gradient_is_identity(self):
+        x = jnp.linspace(-1, 1, 32)
+        g = jax.grad(lambda v: jnp.sum(Q.fake_quant(v, 8)))(x)
+        np.testing.assert_allclose(np.asarray(g), 1.0)
+
+    def test_per_channel_tighter_than_per_tensor(self):
+        key = jax.random.PRNGKey(3)
+        w = jax.random.normal(key, (64, 32)) * \
+            jnp.logspace(-2, 0, 32)[None, :]        # wildly varying scales
+        err_pc = jnp.mean((Q.fake_quant(w, 8, axis=1) - w) ** 2)
+        err_pt = jnp.mean((Q.fake_quant(w, 8, axis=None) - w) ** 2)
+        assert float(err_pc) < float(err_pt)
+
+
+class TestInt8Export:
+    def test_round_trip_error(self):
+        w = jax.random.normal(jax.random.PRNGKey(1), (128, 64))
+        q = Q.quantize_weight_int8(w, Q.QuantConfig(w_bits=8))
+        back = q["q"].astype(jnp.float32) * q["scale"]
+        assert float(jnp.max(jnp.abs(back - w))) < float(q["scale"].max())
+
+    def test_quantize_tree_targets_weights_only(self):
+        params = {"layer": {"w": jnp.ones((8, 8)), "b": jnp.ones((8,)),
+                            "bn": F.batchnorm_init(8)},
+                  "norm": {"g": jnp.ones((8,))}}
+        qt = Q.quantize_tree(params, Q.QuantConfig())
+        assert set(qt["layer"]["w"]) == {"q", "scale"}
+        assert qt["layer"]["w"]["q"].dtype == jnp.int8
+        assert qt["layer"]["b"].dtype == jnp.float32      # untouched
+        assert qt["norm"]["g"].dtype == jnp.float32
+
+    def test_size_reduction_4x(self):
+        """The paper's 4x headline: 8/8 vs f32 weights."""
+        params = {"a": {"w": jnp.ones((256, 256), jnp.float32)}}
+        qt = Q.quantize_tree(params, Q.QuantConfig())
+        ratio = Q.tree_size_bytes(params) / Q.tree_size_bytes(qt)
+        assert 3.9 < ratio < 4.1
+
+    def test_stochastic_rounding_unbiased(self):
+        x = jnp.full((20000,), 0.3)
+        scale = jnp.float32(1.0)
+        bits = jax.random.bits(jax.random.PRNGKey(0), (20000,), jnp.uint32)
+        q = Q.stochastic_round_int8(x, scale, bits)
+        assert abs(float(jnp.mean(q.astype(jnp.float32))) - 0.3) < 0.02
+
+
+class TestBNFusion:
+    @given(seed=st.integers(0, 500))
+    @settings(max_examples=25, deadline=None)
+    def test_fold_exact(self, seed):
+        """w'x + b' must equal BN(wx + b) to fp accuracy (the paper fuses
+        post-QAT and deploys the fused weights)."""
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+        w = jax.random.normal(k1, (16, 8))
+        b = jax.random.normal(k2, (8,))
+        bn = {"gamma": jax.random.normal(k3, (8,)) + 1.0,
+              "beta": jax.random.normal(k1, (8,)),
+              "mean": jax.random.normal(k2, (8,)),
+              "var": jnp.abs(jax.random.normal(k3, (8,))) + 0.5}
+        x = jax.random.normal(k1, (32, 16))
+        want = F.batchnorm_apply(x @ w + b, bn)
+        wf, bf = F.fuse_conv_bn(w, b, bn)
+        np.testing.assert_allclose(np.asarray(x @ wf + bf),
+                                   np.asarray(want), rtol=2e-4, atol=2e-5)
+
+    def test_fuse_tree_drops_bn(self):
+        params = {"c1": {"w": jnp.ones((4, 4)), "b": jnp.zeros((4,)),
+                         "bn": F.batchnorm_init(4)},
+                  "nested": [{"w": jnp.ones((4, 2)), "b": jnp.zeros((2,)),
+                              "bn": F.batchnorm_init(2)}]}
+        assert F.count_bn_blocks(params) == 2
+        fused = F.fuse_tree(params)
+        assert F.count_bn_blocks(fused) == 0
+        assert "bn" not in fused["c1"]
+
+    def test_bn_stats_update(self):
+        bn = F.batchnorm_init(4)
+        x = jax.random.normal(jax.random.PRNGKey(0), (128, 4)) * 3 + 1
+        bn2 = F.batchnorm_update_stats(bn, x, momentum=0.0)
+        np.testing.assert_allclose(np.asarray(bn2["mean"]),
+                                   np.asarray(jnp.mean(x, 0)), rtol=1e-5)

@@ -1,0 +1,105 @@
+"""LFSR / URS / FPS properties (HLS4PC §2.1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sampling as S
+
+
+class TestLFSR:
+    def test_full_period_16bit(self):
+        """Primitive polynomial => maximal period 2^16 - 1 (no repeats)."""
+        state = jnp.array([1], jnp.uint32)
+        _, vals = S.lfsr_sequence(state, 65535, nbits=16)
+        vals = np.asarray(vals[:, 0])
+        assert len(np.unique(vals)) == 65535
+        assert vals.min() >= 1 and vals.max() <= 65535
+
+    def test_deterministic_across_calls(self):
+        st1 = S.seed_streams(42, 4)
+        _, a = S.lfsr_sequence(st1, 100)
+        _, b = S.lfsr_sequence(S.seed_streams(42, 4), 100)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    @given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 64))
+    @settings(max_examples=20, deadline=None)
+    def test_seed_streams_nonzero(self, seed, n):
+        s = np.asarray(S.seed_streams(seed, n))
+        assert (s != 0).all()
+        assert (s < 2**16).all()
+
+    def test_streams_distinct(self):
+        s = np.asarray(S.seed_streams(7, 256))
+        assert len(np.unique(s)) > 200      # hash spreads the seeds
+
+    def test_restart_stability(self):
+        """Same seed -> same sampling indices after 'restart' (the paper's
+        train/deploy LFSR contract)."""
+        st1 = S.seed_streams(123, 8)
+        st1, idx1 = S.urs_indices(st1, 1024, 64)
+        _, idx1b = S.urs_indices(st1, 1024, 64)   # continue the stream
+        # replay from scratch
+        st2 = S.seed_streams(123, 8)
+        st2, idx2 = S.urs_indices(st2, 1024, 64)
+        _, idx2b = S.urs_indices(st2, 1024, 64)
+        np.testing.assert_array_equal(np.asarray(idx1), np.asarray(idx2))
+        np.testing.assert_array_equal(np.asarray(idx1b), np.asarray(idx2b))
+
+
+class TestURS:
+    @given(n_points=st.integers(8, 2048), n_samples=st.integers(1, 128))
+    @settings(max_examples=20, deadline=None)
+    def test_index_bounds(self, n_points, n_samples):
+        _, idx = S.urs_indices(S.seed_streams(0, 1), n_points, n_samples)
+        idx = np.asarray(idx)
+        assert idx.shape == (n_samples,)
+        assert (idx >= 0).all() and (idx < n_points).all()
+
+    def test_batched_streams_differ(self):
+        st0 = S.seed_streams(5, 8)
+        _, idx = S.urs_indices_batched(st0, 1024, 64, batch=8)
+        idx = np.asarray(idx)
+        # different per-element streams should not coincide
+        assert not (idx[0] == idx[1]).all()
+
+    def test_uniformity(self):
+        """Mean index ~ n/2 over a long stream (coarse chi-square-lite)."""
+        _, idx = S.urs_indices(S.seed_streams(1, 1), 100, 20000)
+        counts = np.bincount(np.asarray(idx), minlength=100)
+        assert counts.min() > 100   # every bucket hit many times
+
+
+class TestFPS:
+    def test_first_index_is_start(self):
+        pts = jax.random.normal(jax.random.PRNGKey(0), (100, 3))
+        idx = S.fps(pts, 10)
+        assert int(idx[0]) == 0
+
+    def test_indices_distinct(self):
+        pts = jax.random.normal(jax.random.PRNGKey(1), (200, 3))
+        idx = np.asarray(S.fps(pts, 50))
+        assert len(np.unique(idx)) == 50
+
+    def test_covers_extremes(self):
+        """FPS must select the farthest point as its 2nd pick."""
+        pts = jnp.zeros((10, 3)).at[7].set(jnp.array([100.0, 0, 0]))
+        idx = S.fps(pts, 2)
+        assert int(idx[1]) == 7
+
+    def test_batched(self):
+        pts = jax.random.normal(jax.random.PRNGKey(2), (4, 64, 3))
+        idx = S.fps_batched(pts, 16)
+        assert idx.shape == (4, 16)
+
+    @given(n=st.integers(16, 256), s=st.integers(2, 16))
+    @settings(max_examples=10, deadline=None)
+    def test_minmax_property(self, n, s):
+        """Each selected point maximizes min-dist to previous picks."""
+        pts = jax.random.normal(jax.random.PRNGKey(n * 31 + s), (n, 3))
+        idx = np.asarray(S.fps(pts, s))
+        p = np.asarray(pts)
+        chosen = p[idx[:-1]]
+        d = ((p[:, None] - chosen[None]) ** 2).sum(-1).min(1)
+        assert d[idx[-1]] == pytest.approx(d.max(), rel=1e-5)
