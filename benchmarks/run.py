@@ -10,7 +10,15 @@ from __future__ import annotations
 import argparse
 import json
 import pathlib
+import sys
 import time
+
+_ROOT = pathlib.Path(__file__).resolve().parents[1]
+for _mod, _p in (("repro", _ROOT / "src"), ("benchmarks", _ROOT)):
+    try:
+        __import__(_mod)
+    except ImportError:
+        sys.path.insert(0, str(_p))
 
 
 def _emit(name: str, us: float, derived: str) -> None:
@@ -63,6 +71,13 @@ def bench_table3() -> None:
           f"tpu_lite_sps={rows['tpu_v5e_lite_derived_sps']}")
 
 
+def bench_serve_pointcloud(quick: bool) -> None:
+    from benchmarks import serve_pointcloud
+    for name, us, derived in serve_pointcloud.rows(
+            n_requests=8 if quick else 20, iters=1 if quick else 3):
+        _emit(name, us, derived.replace(",", ";"))
+
+
 def bench_roofline_summary(dryrun_dir: str = "artifacts/dryrun/pod") -> None:
     d = pathlib.Path(dryrun_dir)
     if not d.exists():
@@ -93,6 +108,7 @@ def main() -> None:
     bench_kernels()
     bench_table2()
     bench_table3()
+    bench_serve_pointcloud(args.quick)
     if not args.quick:
         bench_table1(args.table1_steps)
         bench_fig4(args.fig4_steps, max(30, args.fig4_steps // 2))

@@ -1,0 +1,26 @@
+"""JAX version compatibility shims.
+
+The repo targets the container's jax (0.4.x) and whatever current jax
+CI installs; the few API moves between them are absorbed here.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, mesh, in_specs, out_specs, check: bool = False):
+    """``jax.shard_map`` (new API, ``check_vma``) with fallback to
+    ``jax.experimental.shard_map`` (0.4.x API, ``check_rep``)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check)
+
+
+def axis_size(axis_name):
+    """``jax.lax.axis_size`` with 0.4.x fallback (``psum(1, axis)``)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)

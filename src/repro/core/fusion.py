@@ -13,7 +13,7 @@ and the fused parameters are what the int8 export consumes.
 """
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -77,6 +77,21 @@ def fuse_tree(params: Any, eps: float = 1e-5) -> Any:
     if isinstance(params, (list, tuple)):
         return type(params)(fuse_tree(v, eps) for v in params)
     return params
+
+
+def fuse_pointmlp(params: Any, cfg: Any, eps: float = 1e-5
+                  ) -> Tuple[Any, Any]:
+    """Whole-tree inference freeze for a PointMLP parameter tree.
+
+    Folds every Conv+BN block into (w', b') and returns the matching
+    inference config (``use_bn=False``), so the pair can be fed straight
+    to ``pointmlp_infer`` / the serving engine.  ``cfg`` is any config
+    with a dataclass-style ``replace`` (kept duck-typed to avoid a
+    core -> models import cycle).
+
+    Returns: (fused params, cfg.replace(use_bn=False)).
+    """
+    return fuse_tree(params, eps), cfg.replace(use_bn=False)
 
 
 def count_bn_blocks(params: Any) -> int:

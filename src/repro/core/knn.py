@@ -77,7 +77,8 @@ def geometric_affine_init(channels: int) -> dict:
 
 def normalize_group(grouped: jnp.ndarray, centers: jnp.ndarray,
                     params: Optional[dict], mode: str = "affine",
-                    eps: float = 1e-5) -> jnp.ndarray:
+                    eps: float = 1e-5,
+                    per_sample: bool = False) -> jnp.ndarray:
     """Normalize grouped neighborhoods to a stable local representation.
 
     grouped: [B, S, k, C] neighbor features, centers: [B, S, C].
@@ -89,11 +90,17 @@ def normalize_group(grouped: jnp.ndarray, centers: jnp.ndarray,
       * ``norm``    — alpha/beta *pruned* (M-1..M-4 / PointMLP-Lite):
         (g - c) / sigma.
       * ``center``  — plain centering (g - c).
+
+    ``per_sample`` computes sigma per cloud instead of over the batch —
+    the streaming-deployment semantics (the FPGA pipeline sees one frame
+    at a time), which decouples co-batched serving requests.
     """
     off = grouped - centers[:, :, None, :]
     if mode == "center":
         return off
-    sigma = jnp.sqrt(jnp.mean(off * off) + eps)
+    red = (1, 2, 3) if per_sample else None
+    sigma = jnp.sqrt(jnp.mean(off * off, axis=red, keepdims=per_sample)
+                     + eps)
     out = off / (sigma + eps)
     if mode == "norm":
         return out
@@ -105,7 +112,8 @@ def normalize_group(grouped: jnp.ndarray, centers: jnp.ndarray,
 
 def group_points(xyz: jnp.ndarray, feats: jnp.ndarray,
                  sample_idx: jnp.ndarray, k: int,
-                 affine_params: Optional[dict], mode: str
+                 affine_params: Optional[dict], mode: str,
+                 per_sample_norm: bool = False
                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Full local-grouper: sample -> KNN -> gather -> normalize -> concat.
 
@@ -123,6 +131,7 @@ def group_points(xyz: jnp.ndarray, feats: jnp.ndarray,
     center_f = jnp.take_along_axis(feats, sample_idx[..., None], axis=1)
     nbr_idx = knn_batched(new_xyz, xyz, k)                    # [B, S, k]
     grouped = gather_neighbors(feats, nbr_idx)                # [B, S, k, C]
-    grouped = normalize_group(grouped, center_f, affine_params, mode)
+    grouped = normalize_group(grouped, center_f, affine_params, mode,
+                              per_sample=per_sample_norm)
     center_b = jnp.broadcast_to(center_f[:, :, None, :], grouped.shape)
     return new_xyz, center_f, jnp.concatenate([grouped, center_b], axis=-1)

@@ -129,6 +129,30 @@ def count_conv_layers(cfg: PointMLPConfig) -> int:
 
 # ------------------------------------------------------------ apply -----
 
+def _cbr_infer(p: Dict, x: jnp.ndarray, cfg: PointMLPConfig,
+               act: bool = True, use_pallas: bool = False) -> jnp.ndarray:
+    """Pure inference Conv(+BN)(+ReLU): no stat updates, no params return.
+
+    When ``use_pallas`` and the block is already fused (no ``bn``, plain
+    fp32 matmul weight), the whole layer goes through the single-pass
+    ``repro.kernels.fused_linear`` kernel — the TPU rendering of the
+    FPGA's streaming Conv→BN→ReLU stage (interpret mode on CPU).
+    """
+    quant = cfg.quant if cfg.quant.enabled else None
+    w = p["w"]
+    if (use_pallas and not isinstance(w, dict) and w.ndim == 2
+            and "bn" not in p and quant is None):
+        from repro.kernels.fused_linear import fused_linear_pallas
+        b = p.get("b")
+        if b is None:
+            b = jnp.zeros((w.shape[1],), w.dtype)
+        y = fused_linear_pallas(x.reshape(-1, w.shape[0]), w, b,
+                                activation="relu" if act else "none")
+        return y.reshape(*x.shape[:-1], w.shape[1])
+    y = L.conv1d_apply(p, x, quant=quant)
+    return jax.nn.relu(y) if act else y
+
+
 def _cbr_apply(p: Dict, x: jnp.ndarray, cfg: PointMLPConfig, train: bool,
                act: bool = True) -> Tuple[jnp.ndarray, Dict]:
     """Conv(+BN)(+ReLU); in train mode BN uses batch stats and returns a
@@ -157,60 +181,71 @@ def _cbr_apply(p: Dict, x: jnp.ndarray, cfg: PointMLPConfig, train: bool,
     return y, p_new
 
 
-def _res_apply(p: Dict, x, cfg, train) -> Tuple[jnp.ndarray, Dict]:
-    h, n1 = _cbr_apply(p["net1"], x, cfg, train)
-    h, n2 = _cbr_apply(p["net2"], h, cfg, train, act=False)
-    return jax.nn.relu(h + x), {"net1": n1, "net2": n2}
-
-
 def _sample_indices(cfg: PointMLPConfig, xyz: jnp.ndarray, n_samples: int,
-                    lfsr_state: Optional[jnp.ndarray]
+                    lfsr_state: Optional[jnp.ndarray], shared_urs: bool
                     ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
     b, n = xyz.shape[0], xyz.shape[1]
     if cfg.sampler == "fps":
         return sampling.fps_batched(xyz, n_samples), lfsr_state
     assert lfsr_state is not None, "URS sampler needs an LFSR state"
+    if shared_urs:
+        # One sampler module services the whole batch (the hardware has a
+        # single LFSR-driven URS unit in the pipeline): every element of
+        # the batch sees the same index sequence, so a request's result is
+        # independent of its slot — the serving engine's queue-order
+        # invariance contract.
+        new_state, idx = sampling.urs_indices(lfsr_state, n, n_samples)
+        return jnp.broadcast_to(idx[None, :], (b, n_samples)), new_state
     new_state, idx = sampling.urs_indices_batched(
         lfsr_state, n, n_samples, b)
     return idx, new_state
 
 
-def pointmlp_apply(params: Dict, cfg: PointMLPConfig, xyz: jnp.ndarray,
-                   lfsr_state: Optional[jnp.ndarray] = None,
-                   train: bool = False
-                   ) -> Tuple[jnp.ndarray, Dict, Optional[jnp.ndarray]]:
-    """Forward pass.
+def _forward(params: Dict, cfg: PointMLPConfig, xyz: jnp.ndarray,
+             lfsr_state: Optional[jnp.ndarray], train: bool,
+             use_pallas: bool = False, shared_urs: bool = False,
+             per_sample_norm: bool = False
+             ) -> Tuple[jnp.ndarray, Dict, Optional[jnp.ndarray]]:
+    """Shared topology walk.  ``train`` selects the stat-threading CBR
+    (functional BN updates) vs the pure inference CBR; the walk itself —
+    embed → 4×(sample, group, transfer, pre, pool, pos) → head — is
+    written once for both."""
+    if train:
+        def cbr(p, x, act=True):
+            return _cbr_apply(p, x, cfg, True, act)
+    else:
+        def cbr(p, x, act=True):
+            return _cbr_infer(p, x, cfg, act, use_pallas), p
 
-    Args:
-      xyz: [B, N, 3] point coordinates (N == cfg.n_points).
-      lfsr_state: uint32 [>=B] LFSR streams (URS sampler only).
+    def res(p, x):
+        h, n1 = cbr(p["net1"], x)
+        h, n2 = cbr(p["net2"], h, act=False)
+        return jax.nn.relu(h + x), {"net1": n1, "net2": n2}
 
-    Returns: (logits [B, n_classes], updated params (BN stats), lfsr state).
-    """
     new_params = {k: v for k, v in params.items()}
-    feats, emb = _cbr_apply(params["embed"], xyz, cfg, train)   # [B,N,E]
-    new_params["embed"] = emb
+    feats, new_params["embed"] = cbr(params["embed"], xyz)      # [B,N,E]
 
     cur_xyz, cur = xyz, feats
     new_stages = []
     for s, st in enumerate(params["stages"]):
         n_samp = cfg.stage_samples[s]
-        idx, lfsr_state = _sample_indices(cfg, cur_xyz, n_samp, lfsr_state)
+        idx, lfsr_state = _sample_indices(cfg, cur_xyz, n_samp, lfsr_state,
+                                          shared_urs)
         affine = st.get("affine")
         cur_xyz, _, grouped = knn_core.group_points(
-            cur_xyz, cur, idx, cfg.k_neighbors, affine, cfg.affine_mode)
+            cur_xyz, cur, idx, cfg.k_neighbors, affine, cfg.affine_mode,
+            per_sample_norm=per_sample_norm)
         st_new = dict(st)
-        h, st_new["transfer"] = _cbr_apply(st["transfer"], grouped, cfg,
-                                           train)               # [B,S,k,C]
+        h, st_new["transfer"] = cbr(st["transfer"], grouped)    # [B,S,k,C]
         pre_new = []
         for blk in st["pre"]:
-            h, b_new = _res_apply(blk, h, cfg, train)
+            h, b_new = res(blk, h)
             pre_new.append(b_new)
         st_new["pre"] = pre_new
         h = jnp.max(h, axis=2)                                  # pool over k
         pos_new = []
         for blk in st["pos"]:
-            h, b_new = _res_apply(blk, h, cfg, train)
+            h, b_new = res(blk, h)
             pos_new.append(b_new)
         st_new["pos"] = pos_new
         new_stages.append(st_new)
@@ -219,12 +254,61 @@ def pointmlp_apply(params: Dict, cfg: PointMLPConfig, xyz: jnp.ndarray,
 
     g = jnp.max(cur, axis=1)                                    # [B, C]
     head = params["head"]
-    h, f1 = _cbr_apply(head["fc1"], g, cfg, train)
-    h, f2 = _cbr_apply(head["fc2"], h, cfg, train)
+    h, f1 = cbr(head["fc1"], g)
+    h, f2 = cbr(head["fc2"], h)
     logits = L.conv1d_apply(head["fc3"], h,
                             quant=cfg.quant if cfg.quant.enabled else None)
     new_params["head"] = {"fc1": f1, "fc2": f2, "fc3": head["fc3"]}
     return logits, new_params, lfsr_state
+
+
+def pointmlp_infer(params: Dict, cfg: PointMLPConfig, xyz: jnp.ndarray,
+                   lfsr_state: Optional[jnp.ndarray] = None,
+                   use_pallas: bool = False, shared_urs: bool = False,
+                   per_sample_norm: bool = False
+                   ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """Pure inference forward — the deployment hot path.
+
+    No BN-stat threading and no new-params return: with fused params
+    (``repro.core.fusion.fuse_pointmlp``) every CBR is a single
+    matmul+bias+ReLU, optionally routed through the fused Pallas kernel.
+
+    Args:
+      xyz: [B, N, 3] point coordinates (N == cfg.n_points).
+      lfsr_state: uint32 [>=B] LFSR streams (URS sampler only).
+      use_pallas: route fused fp32 CBR layers through
+        ``repro.kernels.fused_linear`` (interpret mode on CPU).
+      shared_urs: one URS index sequence shared across the batch
+        (slot-invariant results; used by the serving engine).
+      per_sample_norm: per-cloud geometric-affine sigma (streaming
+        deployment semantics — co-batched requests fully decoupled).
+
+    Returns: (logits [B, n_classes], advanced lfsr state).
+    """
+    logits, _, lfsr_state = _forward(params, cfg, xyz, lfsr_state,
+                                     train=False, use_pallas=use_pallas,
+                                     shared_urs=shared_urs,
+                                     per_sample_norm=per_sample_norm)
+    return logits, lfsr_state
+
+
+def pointmlp_apply(params: Dict, cfg: PointMLPConfig, xyz: jnp.ndarray,
+                   lfsr_state: Optional[jnp.ndarray] = None,
+                   train: bool = False
+                   ) -> Tuple[jnp.ndarray, Dict, Optional[jnp.ndarray]]:
+    """Training-facing forward (thin wrapper over the shared walk).
+
+    Args:
+      xyz: [B, N, 3] point coordinates (N == cfg.n_points).
+      lfsr_state: uint32 [>=B] LFSR streams (URS sampler only).
+
+    Returns: (logits [B, n_classes], updated params (BN stats), lfsr state).
+    In eval mode the params pass through unchanged (pure inference path).
+    """
+    if not train:
+        logits, lfsr_state = pointmlp_infer(params, cfg, xyz, lfsr_state)
+        return logits, params, lfsr_state
+    return _forward(params, cfg, xyz, lfsr_state, train=True)
 
 
 def pointmlp_flops(cfg: PointMLPConfig) -> int:

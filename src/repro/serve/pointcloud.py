@@ -1,0 +1,179 @@
+"""Batched point-cloud inference engine (HLS4PC deployment path).
+
+The serving analogue of the paper's streaming FPGA pipeline: a trained
+PointMLP is *frozen* once — BN folded into (w, b) via
+``repro.core.fusion.fuse_pointmlp`` and optionally exported to int8 via
+``repro.core.quant`` — then a jitted fixed-shape ``classify`` drains a
+ragged request queue in pad-to-batch chunks.  No training-time machinery
+(BN-stat threading, per-call FPS) survives in the hot path:
+
+* fused fp32 layers route through the single-pass
+  ``repro.kernels.fused_linear`` Pallas kernel (interpret mode on CPU);
+* the URS sampler runs off a *persistent* LFSR state held by the engine
+  — the deployment PRNG contract of the paper: one sampler module
+  services the whole batch, so results are queue-order invariant and
+  state advances deterministically across calls;
+* the LFSR buffer is donated to each jitted call, and the one
+  ``(max_batch, n_points)`` executable ``classify`` dispatches can be
+  compiled ahead of traffic with ``warmup()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fusion, quant, sampling
+from repro.models import pointmlp as PM
+
+
+@dataclasses.dataclass
+class PointCloudStats:
+    requests: int = 0          # real samples served
+    batches: int = 0           # jitted fixed-shape dispatches
+    padded: int = 0            # dummy pad samples computed
+    compile_s: float = 0.0     # time spent in warmup compiles
+    serve_s: float = 0.0       # time spent in classify (steady state)
+
+    @property
+    def samples_per_s(self) -> float:
+        return self.requests / max(self.serve_s, 1e-9)
+
+
+class PointCloudEngine:
+    """Fixed-shape batched classifier over a frozen PointMLP.
+
+    Args:
+      params: trained parameter tree (BN running stats populated).
+      cfg: the training :class:`~repro.models.pointmlp.PointMLPConfig`.
+      max_batch: fixed dispatch batch; ragged queues are padded/chunked.
+      quantize: export fused weights to int8 (``int8_ref`` backend);
+        otherwise serve fused fp32 (fake-quant QAT noise is dropped —
+        deployment runs the frozen arithmetic, not the QAT simulation).
+      backend: ``"pallas"`` routes fused fp32 layers through
+        ``repro.kernels.fused_linear`` (interpret mode on CPU);
+        ``"ref"`` uses the plain jnp path.  int8 always uses the
+        reference int8 matmul.
+      seed: LFSR seed — must match training for the paper's
+        "same starting states" deployment contract.
+    """
+
+    def __init__(self, params: Dict, cfg: PM.PointMLPConfig,
+                 max_batch: int = 8, quantize: bool = False,
+                 backend: str = "pallas", seed: int = 0):
+        assert backend in ("pallas", "ref")
+        fused, icfg = fusion.fuse_pointmlp(params, cfg)
+        if quantize:
+            qcfg = dataclasses.replace(
+                cfg.quant if cfg.quant.enabled else quant.QuantConfig(),
+                w_bits=min(cfg.quant.w_bits, 8), backend="int8_ref")
+            self.params = quant.quantize_tree(fused, qcfg)
+            icfg = icfg.replace(quant=qcfg)
+        else:
+            self.params = fused
+            icfg = icfg.replace(quant=quant.QuantConfig(w_bits=32,
+                                                        a_bits=32))
+        self.cfg = icfg
+        self.max_batch = int(max_batch)
+        self.quantized = bool(quantize)
+        self.use_pallas = backend == "pallas" and not quantize
+        self.stats = PointCloudStats()
+        self._lfsr = sampling.seed_streams(seed, max(self.max_batch, 64))
+        self._jitted = None
+
+    # ------------------------------------------------- compile cache ----
+
+    @property
+    def _fn(self):
+        """The jitted fixed-shape forward.
+
+        ``jax.jit`` caches one executable per ``(batch, n_points)``
+        argument shape; the engine dispatches exactly one —
+        ``(max_batch, cfg.n_points)`` — which :meth:`warmup`
+        precompiles.  The LFSR buffer (arg 2) is donated: the engine
+        immediately replaces its state with the returned one, so the
+        old buffer can be reused in place by the runtime.
+        """
+        if self._jitted is None:
+            cfg, up = self.cfg, self.use_pallas
+
+            def fwd(params, pts, lfsr):
+                # shared_urs + per_sample_norm = streaming deployment
+                # semantics: one sampler services the batch and every
+                # cloud normalizes with its own statistics, so results
+                # are queue-order invariant and pad lanes cannot leak.
+                return PM.pointmlp_infer(params, cfg, pts, lfsr,
+                                         use_pallas=up, shared_urs=True,
+                                         per_sample_norm=True)
+
+            self._jitted = jax.jit(fwd, donate_argnums=(2,))
+        return self._jitted
+
+    def warmup(self) -> float:
+        """Compile the ``(max_batch, n_points)`` executable — the one
+        shape ``classify`` dispatches — ahead of traffic (does not
+        consume LFSR state).  Returns compile seconds."""
+        b = self.max_batch
+        dummy = jnp.zeros((b, self.cfg.n_points, 3), jnp.float32)
+        t0 = time.time()
+        logits, _ = self._fn(self.params, dummy, jnp.array(self._lfsr))
+        logits.block_until_ready()
+        dt = time.time() - t0
+        self.stats.compile_s += dt
+        return dt
+
+    # ------------------------------------------------------- serving ----
+
+    def classify(self, points) -> jnp.ndarray:
+        """Classify a ragged queue of point clouds.
+
+        Args:
+          points: [R, N, 3] array (or list of [N, 3] clouds) with
+            N == cfg.n_points; R is arbitrary — the queue is chunked to
+            ``max_batch`` and the last chunk zero-padded.
+
+        Returns: logits [R, n_classes] — rows only for the R real
+        requests; pad lanes are computed but never returned.
+        """
+        pts = jnp.asarray(points, jnp.float32)
+        if pts.size == 0:                           # drained queue
+            return jnp.zeros((0, self.cfg.n_classes), jnp.float32)
+        if pts.ndim == 2:
+            pts = pts[None]
+        r, n = pts.shape[0], pts.shape[1]
+        assert n == self.cfg.n_points, \
+            f"engine is fixed-shape: got N={n}, expected {self.cfg.n_points}"
+        fn = self._fn
+        t0 = time.time()
+        out = []
+        for i in range(0, r, self.max_batch):
+            chunk = pts[i:i + self.max_batch]
+            real = chunk.shape[0]
+            pad = self.max_batch - real
+            if pad:
+                chunk = jnp.concatenate(
+                    [chunk, jnp.zeros((pad, n, 3), jnp.float32)], axis=0)
+            logits, self._lfsr = fn(self.params, chunk, self._lfsr)
+            out.append(logits[:real])
+            self.stats.batches += 1
+            self.stats.padded += pad
+        jax.block_until_ready(out[-1])
+        self.stats.serve_s += time.time() - t0
+        self.stats.requests += r
+        return jnp.concatenate(out, axis=0)
+
+    def predict(self, points) -> jnp.ndarray:
+        """Top-1 class ids [R] for a ragged queue."""
+        return jnp.argmax(self.classify(points), axis=-1).astype(jnp.int32)
+
+    @property
+    def lfsr_state(self) -> jnp.ndarray:
+        """Persistent URS sampler state (uint32 streams).
+
+        Returns a copy: the internal buffer is donated to the next
+        ``classify`` dispatch and would otherwise be deleted under a
+        caller-held reference on donation-honoring backends."""
+        return jnp.array(self._lfsr)

@@ -1,0 +1,36 @@
+"""Shared test scaffolding.
+
+* Path bootstrap: makes ``repro`` (src layout) and the ``benchmarks``
+  helpers importable whether the suite runs via ``pip install -e .`` or
+  the bare checkout (tier-1: ``PYTHONPATH=src python -m pytest``).
+* ``prng_seed`` / ``rng_key``: the session-fixed PRNG contract — every
+  test derives randomness from one seed so failures reproduce exactly.
+"""
+from __future__ import annotations
+
+import pathlib
+import sys
+
+import pytest
+
+_ROOT = pathlib.Path(__file__).resolve().parents[1]
+for module, path in (("repro", _ROOT / "src"), ("benchmarks", _ROOT)):
+    try:
+        __import__(module)
+    except ImportError:
+        sys.path.insert(0, str(path))
+
+
+PRNG_SEED = 0
+
+
+@pytest.fixture(scope="session")
+def prng_seed() -> int:
+    """The one seed all test randomness derives from."""
+    return PRNG_SEED
+
+
+@pytest.fixture()
+def rng_key(prng_seed):
+    import jax
+    return jax.random.PRNGKey(prng_seed)

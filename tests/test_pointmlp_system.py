@@ -58,6 +58,7 @@ class TestPointMLP:
         np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
         np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
 
+    @pytest.mark.slow
     def test_training_reduces_loss(self):
         """A few SGD steps on the synthetic set must reduce loss — the
         system learns (miniature of the paper's training loop)."""

@@ -1,0 +1,176 @@
+"""PointCloudEngine serving contracts (HLS4PC deployment path).
+
+Fused-vs-unfused agreement, pad-to-batch semantics, deterministic LFSR
+advance across calls, and queue-order invariance within a batch.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sampling
+from repro.core.quant import QuantConfig
+from repro.data import pointclouds
+from repro.models import pointmlp as PM
+from repro.serve.pointcloud import PointCloudEngine
+
+KEY = jax.random.PRNGKey(0)
+
+
+def tiny(cfg: PM.PointMLPConfig) -> PM.PointMLPConfig:
+    return cfg.replace(n_points=128, embed_dim=16, n_classes=8,
+                       k_neighbors=8)
+
+
+@pytest.fixture(scope="module")
+def lite_setup():
+    cfg = tiny(PM.pointmlp_lite_config(8))
+    params = PM.pointmlp_init(KEY, cfg)
+    pts, _ = pointclouds.make_batch(jax.random.PRNGKey(1), cfg.n_points, 6)
+    return cfg, params, pts
+
+
+class TestFusedAgreement:
+    def test_engine_matches_unfused_forward_urs(self, lite_setup):
+        """classify == the unfused training-path forward (inference BN,
+        fp32, same shared-URS indices) within 1e-3 max-abs."""
+        cfg, params, pts = lite_setup
+        eng = PointCloudEngine(params, cfg, max_batch=4, backend="ref",
+                               seed=7)
+        got = eng.classify(pts[:4])
+        ref_cfg = cfg.replace(quant=QuantConfig(w_bits=32, a_bits=32))
+        lfsr = sampling.seed_streams(7, max(4, 64))
+        want, _ = PM.pointmlp_infer(params, ref_cfg, pts[:4], lfsr,
+                                    shared_urs=True, per_sample_norm=True)
+        assert float(jnp.max(jnp.abs(got - want))) < 1e-3
+
+    def test_engine_matches_pointmlp_apply_single_request(self, lite_setup):
+        """A single-request queue is directly comparable to the untouched
+        training entry point ``pointmlp_apply`` (batch-of-1 sigma ==
+        per-cloud sigma; shared URS == per-slot stream 0)."""
+        cfg, params, pts = lite_setup
+        ref_cfg = cfg.replace(quant=QuantConfig(w_bits=32, a_bits=32))
+        eng = PointCloudEngine(params, cfg, max_batch=4, backend="ref",
+                               seed=13)
+        got = eng.classify(pts[:1])
+        want, _, _ = PM.pointmlp_apply(params, ref_cfg, pts[:1],
+                                       sampling.seed_streams(13, 64))
+        assert float(jnp.max(jnp.abs(got - want))) < 1e-3
+
+    def test_engine_matches_pointmlp_apply_fps(self, lite_setup):
+        """With the data-dependent FPS sampler (Elite deployment) the
+        same single-request equivalence holds without any LFSR state."""
+        cfg, params, pts = lite_setup
+        fps_cfg = cfg.replace(sampler="fps",
+                              quant=QuantConfig(w_bits=32, a_bits=32))
+        eng = PointCloudEngine(params, fps_cfg, max_batch=2, backend="ref")
+        got = eng.classify(pts[:1])
+        want, _, _ = PM.pointmlp_apply(params, fps_cfg, pts[:1])
+        assert float(jnp.max(jnp.abs(got - want))) < 1e-3
+
+    def test_pallas_backend_matches_ref(self, lite_setup):
+        """Fused-Pallas routing (interpret mode on CPU) reproduces the
+        plain jnp path."""
+        cfg, params, pts = lite_setup
+        ref = PointCloudEngine(params, cfg, max_batch=2, backend="ref",
+                               seed=3).classify(pts[:2])
+        got = PointCloudEngine(params, cfg, max_batch=2, backend="pallas",
+                               seed=3).classify(pts[:2])
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   atol=1e-4, rtol=1e-4)
+
+    def test_int8_deploy_close_to_fp32(self, lite_setup):
+        cfg, params, pts = lite_setup
+        fp = PointCloudEngine(params, cfg, max_batch=4, backend="ref",
+                              seed=5).classify(pts[:4])
+        q8 = PointCloudEngine(params, cfg, max_batch=4, quantize=True,
+                              seed=5).classify(pts[:4])
+        assert bool(jnp.all(jnp.isfinite(q8)))
+        agree = float(jnp.mean(jnp.argmax(q8, -1) == jnp.argmax(fp, -1)))
+        assert agree >= 0.5
+
+
+class TestPadToBatch:
+    def test_ragged_queue_returns_only_real_requests(self, lite_setup):
+        cfg, params, pts = lite_setup
+        eng = PointCloudEngine(params, cfg, max_batch=4, backend="ref")
+        out = eng.classify(pts[:3])                  # 3 real + 1 pad lane
+        assert out.shape == (3, cfg.n_classes)
+        assert eng.stats.requests == 3 and eng.stats.padded == 1
+
+    def test_pad_lanes_do_not_leak_into_real_results(self, lite_setup):
+        """A 3-request queue gives the same logits as the same 3 clouds
+        followed by a 4th — padding is invisible to real lanes."""
+        cfg, params, pts = lite_setup
+        a = PointCloudEngine(params, cfg, max_batch=4, backend="ref",
+                             seed=2).classify(pts[:3])
+        b = PointCloudEngine(params, cfg, max_batch=4, backend="ref",
+                             seed=2).classify(pts[:4])
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b[:3]),
+                                   atol=1e-6)
+
+    def test_empty_queue_returns_empty(self, lite_setup):
+        cfg, params, _ = lite_setup
+        eng = PointCloudEngine(params, cfg, max_batch=4, backend="ref")
+        assert eng.classify([]).shape == (0, cfg.n_classes)
+        assert eng.classify(jnp.zeros((0, cfg.n_points, 3))).shape == \
+            (0, cfg.n_classes)
+        assert eng.stats.batches == 0
+
+    def test_queue_longer_than_batch_is_chunked(self, lite_setup):
+        cfg, params, pts = lite_setup
+        eng = PointCloudEngine(params, cfg, max_batch=4, backend="ref")
+        out = eng.classify(pts)                      # 6 requests, batch 4
+        assert out.shape == (6, cfg.n_classes)
+        assert eng.stats.batches == 2 and eng.stats.padded == 2
+
+
+class TestLFSRState:
+    def test_state_advances_deterministically_across_calls(self, lite_setup):
+        """Each fixed-shape dispatch consumes exactly sum(stage_samples)
+        LFSR words from every stream, so the engine state after k calls
+        equals a pure lfsr_sequence advance — restart-stable."""
+        cfg, params, pts = lite_setup
+        eng = PointCloudEngine(params, cfg, max_batch=4, backend="ref",
+                               seed=11)
+        eng.classify(pts[:4])
+        eng.classify(pts[:2])                        # 2 dispatches total
+        per_call = sum(cfg.stage_samples)
+        want, _ = sampling.lfsr_sequence(
+            sampling.seed_streams(11, max(4, 64)), 2 * per_call)
+        np.testing.assert_array_equal(np.asarray(eng.lfsr_state),
+                                      np.asarray(want))
+
+    def test_same_seed_same_results(self, lite_setup):
+        cfg, params, pts = lite_setup
+        a = PointCloudEngine(params, cfg, max_batch=4, backend="ref",
+                             seed=4).classify(pts[:4])
+        b = PointCloudEngine(params, cfg, max_batch=4, backend="ref",
+                             seed=4).classify(pts[:4])
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_warmup_compiles_without_consuming_state(self, lite_setup):
+        cfg, params, pts = lite_setup
+        eng = PointCloudEngine(params, cfg, max_batch=4, backend="ref",
+                               seed=6)
+        s0 = np.asarray(eng.lfsr_state)
+        assert eng.warmup() > 0.0
+        np.testing.assert_array_equal(np.asarray(eng.lfsr_state), s0)
+        ref = PointCloudEngine(params, cfg, max_batch=4, backend="ref",
+                               seed=6).classify(pts[:4])
+        np.testing.assert_array_equal(np.asarray(eng.classify(pts[:4])),
+                                      np.asarray(ref))
+
+
+class TestQueueOrderInvariance:
+    def test_logits_invariant_to_order_within_batch(self, lite_setup):
+        """One URS sampler services the whole batch, so a request's
+        logits are independent of its slot in the queue."""
+        cfg, params, pts = lite_setup
+        perm = jnp.array([3, 1, 0, 2])
+        a = PointCloudEngine(params, cfg, max_batch=4, backend="ref",
+                             seed=9).classify(pts[:4])
+        b = PointCloudEngine(params, cfg, max_batch=4, backend="ref",
+                             seed=9).classify(pts[perm])
+        np.testing.assert_allclose(np.asarray(a[perm]), np.asarray(b),
+                                   atol=1e-6)

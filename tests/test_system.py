@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_smoke_config
 from repro.core import compress as CP
@@ -12,6 +13,7 @@ from repro.models.api import get_model
 from repro.serve.engine import Engine
 
 
+@pytest.mark.slow
 def test_paper_pipeline_end_to_end(tmp_path):
     """Fig. 1 workflow: pretrained model + dataset -> QAT compression ->
     fused/int8 deploy artifact -> inference; accuracy preserved vs fp."""
