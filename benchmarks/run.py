@@ -71,6 +71,48 @@ def bench_table3() -> None:
           f"tpu_lite_sps={rows['tpu_v5e_lite_derived_sps']}")
 
 
+def bench_specs() -> None:
+    """One row per registered backend (PipelineSpec API smoke).
+
+    Drives ``build(spec).infer`` through the serving engine for every
+    entry in the backend registry, so the CI ``--quick`` smoke exercises
+    each lowering path.  Only the real ``pallas`` backend may be
+    unavailable (it needs a TPU; on CPU the row reports the failure) —
+    any other backend error propagates and fails the smoke.
+    """
+    import jax
+
+    from benchmarks import serve_pointcloud as sp
+    from repro.api import BACKENDS, lite_spec
+    from repro.data import pointclouds
+    from repro.models import pointmlp as PM
+    from repro.serve.pointcloud import PointCloudEngine
+
+    # fp32 so each row genuinely lowers CBR layers through its backend
+    # entry (int8 trees fall back to the reference int8 matmul).
+    base = lite_spec(pointclouds.N_CLASSES).replace(
+        n_points=128, embed_dim=16, k_neighbors=8,
+        precision="fp32").serving()
+    params = PM.pointmlp_init(jax.random.PRNGKey(0),
+                              base.to_model_config())
+    pts, _ = pointclouds.make_batch(jax.random.PRNGKey(1), base.n_points, 2)
+    for backend in BACKENDS.names():
+        spec = base.replace(backend=backend)
+        t0 = time.time()
+        try:
+            eng = PointCloudEngine(params, spec, max_batch=2, seed=0)
+            sps, _ = sp.measure(eng, pts, iters=1)
+            derived = (f"backend={backend};precision={spec.precision};"
+                       f"SPS={sps:.1f}")
+        except Exception as e:
+            if backend != "pallas":     # only the TPU path may be absent
+                raise
+            derived = (f"backend={backend};"
+                       f"unavailable={type(e).__name__}")
+        _emit(f"spec_{backend}", (time.time() - t0) * 1e6,
+              derived.replace(",", ";"))
+
+
 def bench_serve_pointcloud(quick: bool) -> None:
     from benchmarks import serve_pointcloud
     for name, us, derived in serve_pointcloud.rows(
@@ -108,6 +150,7 @@ def main() -> None:
     bench_kernels()
     bench_table2()
     bench_table3()
+    bench_specs()
     bench_serve_pointcloud(args.quick)
     if not args.quick:
         bench_table1(args.table1_steps)

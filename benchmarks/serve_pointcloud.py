@@ -2,55 +2,62 @@
 
 Measures steady-state samples/sec of :class:`PointCloudEngine` draining a
 ragged request queue (pad-to-batch, fused params, persistent URS state),
-for the fp32-fused and int8 deployments of PointMLP-Lite.  Compile time
-is reported separately (warmup) — the FPGA analogue is bitstream load,
-not per-frame latency.
+for the fp32-fused and int8 deployments of PointMLP-Lite.  Variants are
+:class:`~repro.api.spec.PipelineSpec`s; compile time is reported
+separately (warmup) — the FPGA analogue is bitstream load, not per-frame
+latency.
 """
 from __future__ import annotations
 
-import time
 from typing import List, Tuple
 
 import jax
 
+from repro.api import lite_spec
 from repro.data import pointclouds
 from repro.models import pointmlp as PM
 from repro.serve.pointcloud import PointCloudEngine
 
 
-def measure(engine: PointCloudEngine, requests, iters: int = 3) -> float:
-    """Steady-state samples/sec over ``iters`` queue drains."""
-    engine.warmup()
+def measure(engine: PointCloudEngine, requests, iters: int = 3
+            ) -> Tuple[float, float]:
+    """Steady-state samples/sec over ``iters`` queue drains (device
+    dispatch time only — ``stats.serve_s`` excludes host-side prep).
+
+    Returns (samples_per_s, compile_s)."""
+    compile_s = engine.warmup()
     engine.classify(requests)                       # steady-state entry
-    t0 = time.time()
+    engine.stats.reset()
     for _ in range(iters):
         engine.classify(requests)
-    dt = time.time() - t0
-    return requests.shape[0] * iters / dt
+    return engine.stats.samples_per_s, compile_s
 
 
 def rows(batch: int = 8, n_requests: int = 20, iters: int = 3
          ) -> List[Tuple[str, float, str]]:
-    cfg = PM.pointmlp_lite_config(pointclouds.N_CLASSES)
-    params = PM.pointmlp_init(jax.random.PRNGKey(0), cfg)
-    pts, _ = pointclouds.make_batch(jax.random.PRNGKey(1), cfg.n_points,
+    base = lite_spec(pointclouds.N_CLASSES).serving()
+    params = PM.pointmlp_init(jax.random.PRNGKey(0),
+                              base.to_model_config())
+    pts, _ = pointclouds.make_batch(jax.random.PRNGKey(1), base.n_points,
                                     n_requests)
     out = []
     # The Pallas route runs in *interpret* mode on CPU (a correctness
     # canary, not a fast path) — one tiny queue keeps the row cheap.
-    for name, kw, req, it in (
-            ("serve_pointcloud", {"backend": "ref"}, n_requests, iters),
-            ("serve_pointcloud_int8", {"quantize": True}, n_requests,
-             iters),
-            ("serve_pointcloud_pallas", {"backend": "pallas"}, 2, 1)):
-        eng = PointCloudEngine(params, cfg, max_batch=min(batch, req),
-                               seed=0, **kw)
-        sps = measure(eng, pts[:req], it)
+    for name, spec, req, it in (
+            ("serve_pointcloud", base.replace(precision="fp32"),
+             n_requests, iters),
+            ("serve_pointcloud_int8", base, n_requests, iters),
+            ("serve_pointcloud_pallas",
+             base.replace(precision="fp32", backend="pallas_interpret"),
+             2, 1)):
+        eng = PointCloudEngine(params, spec, max_batch=min(batch, req),
+                               seed=0)
+        sps, compile_s = measure(eng, pts[:req], it)
         us = 1e6 / max(sps, 1e-9)                   # us per sample
         out.append((name, us,
                     f"SPS={sps:.1f};batch={min(batch, req)};"
                     f"requests={req};"
-                    f"compile_s={eng.stats.compile_s:.2f}"))
+                    f"compile_s={compile_s:.2f}"))
     return out
 
 

@@ -2,29 +2,32 @@
 
 Miniature reproduction on the synthetic benchmark; the paper's claim
 under test is the ordering: accuracy degrades gracefully down the ladder
-(~2% OA at M-2), not absolute ModelNet40 numbers.
+(~2% OA at M-2), not absolute ModelNet40 numbers.  The ladder is
+enumerated as :class:`~repro.api.spec.PipelineSpec`s — the declarative
+variant sheet — and each spec is lowered to its training config for the
+miniature QAT run.
 """
 from __future__ import annotations
 
 import json
 import pathlib
+import time
 
-from repro.core.compress import compression_ladder
-from repro.core.quant import QuantConfig
+from repro.api import compression_ladder_specs
 
 from benchmarks._pointmlp_train import scale_down, train_eval
 
 
 def run(steps: int = 150, out: str = "artifacts/bench") -> list:
     rows = []
-    for cfg in compression_ladder():
-        cfg = scale_down(cfg)
-        import time
+    for spec in compression_ladder_specs():
+        cfg = scale_down(spec.to_model_config())
         t0 = time.time()
         _, oa, ma = train_eval(cfg, steps=steps)
-        rows.append({"model": cfg.name, "n_points": cfg.n_points,
-                     "sampler": cfg.sampler, "affine": cfg.affine_mode,
+        rows.append({"model": spec.name, "n_points": cfg.n_points,
+                     "sampler": spec.sampler, "affine": spec.affine_mode,
                      "w_bits": cfg.quant.w_bits, "a_bits": cfg.quant.a_bits,
+                     "precision": spec.precision,
                      "oa": round(oa, 4), "ma": round(ma, 4),
                      "train_s": round(time.time() - t0, 1)})
         print(f"table1: {rows[-1]}", flush=True)

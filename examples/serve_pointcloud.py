@@ -21,6 +21,7 @@ for _mod, _p in (("repro", _ROOT / "src"), ("benchmarks", _ROOT)):
 
 import jax  # noqa: E402
 
+from repro.api import PipelineSpec, lite_spec  # noqa: E402
 from repro.data import pointclouds  # noqa: E402
 from repro.models import pointmlp as PM  # noqa: E402
 from repro.serve.pointcloud import PointCloudEngine  # noqa: E402
@@ -34,31 +35,38 @@ def main() -> None:
                     help="fixed dispatch batch of the engine")
     ap.add_argument("--int8", action="store_true",
                     help="serve the int8 deployment instead of fused fp32")
-    ap.add_argument("--backend", choices=("ref", "pallas"), default="ref")
+    ap.add_argument("--backend",
+                    choices=("ref", "pallas_interpret", "pallas"),
+                    default="ref")
     ap.add_argument("--train-steps", type=int, default=0,
                     help="miniature-train first (0 = random weights demo)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    cfg = PM.pointmlp_lite_config(pointclouds.N_CLASSES)
+    spec = lite_spec(pointclouds.N_CLASSES)
     if args.train_steps > 0:
         from benchmarks._pointmlp_train import scale_down, train_eval
-        cfg = scale_down(cfg)
-        params, oa, _ = train_eval(cfg, steps=args.train_steps,
-                                   seed=args.seed)
+        spec = PipelineSpec.from_model_config(
+            scale_down(spec.to_model_config()))
+        params, oa, _ = train_eval(spec.to_model_config(),
+                                   steps=args.train_steps, seed=args.seed)
         print(f"trained {args.train_steps} steps: overall acc {oa:.3f}")
     else:
-        params = PM.pointmlp_init(jax.random.PRNGKey(args.seed), cfg)
+        params = PM.pointmlp_init(jax.random.PRNGKey(args.seed),
+                                  spec.to_model_config())
         print("serving random-init weights (pass --train-steps to train)")
 
-    engine = PointCloudEngine(params, cfg, max_batch=args.batch,
-                              quantize=args.int8, backend=args.backend,
+    # The serving spec: deployment precision + backend + streaming-batch
+    # semantics (shared URS sampler, per-cloud normalization).
+    spec = spec.replace(precision="int8" if args.int8 else "fp32",
+                        backend=args.backend).serving()
+    engine = PointCloudEngine(params, spec, max_batch=args.batch,
                               seed=args.seed)
-    print(f"warmup/compile: {engine.warmup():.2f}s "
-          f"({'int8' if args.int8 else 'fp32-fused'}, {args.backend})")
+    print(engine.describe())
+    print(f"warmup/compile: {engine.warmup():.2f}s")
 
     pts, labels = pointclouds.make_batch(jax.random.PRNGKey(args.seed + 1),
-                                         cfg.n_points, args.requests)
+                                         spec.n_points, args.requests)
     pred = engine.predict(pts)
     names = pointclouds.CLASS_NAMES
     for i in range(args.requests):

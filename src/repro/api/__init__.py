@@ -1,0 +1,34 @@
+"""Public pipeline API: declarative specs, component registries, builder.
+
+    from repro.api import PipelineSpec, build, lite_spec
+
+    pipe = build(lite_spec(n_classes=40).serving(), params)
+    logits, state = pipe.infer(pts, pipe.seed_state(seed=0))
+
+Submodules: ``spec`` (PipelineSpec + paper variants), ``registry``
+(sampler/grouper/backend tables + ``@register_*`` decorators), ``build``
+(spec compiler), ``compat`` (legacy-kwarg shims).
+
+No submodule here imports ``repro.models`` at module level (the
+spec<->model-config bridge defers it), so this package sits below the
+models in the import graph and ``repro.models.pointmlp`` can import
+``repro.api.registry`` freely.  The eager ``from .build import build``
+also pins the package attribute ``build`` to the *function*, not the
+submodule of the same name, regardless of import order.
+"""
+from __future__ import annotations
+
+from repro.api.build import FrozenPipeline, build
+from repro.api.compat import config_to_spec, spec_to_config
+from repro.api.registry import (BACKENDS, GROUPERS, SAMPLERS, Registry,
+                                register_backend, register_grouper,
+                                register_sampler)
+from repro.api.spec import (PipelineSpec, compression_ladder_specs,
+                            elite_spec, lite_spec, m2_spec)
+
+__all__ = [
+    "BACKENDS", "FrozenPipeline", "GROUPERS", "PipelineSpec", "Registry",
+    "SAMPLERS", "build", "compression_ladder_specs", "config_to_spec",
+    "elite_spec", "lite_spec", "m2_spec", "register_backend",
+    "register_grouper", "register_sampler", "spec_to_config",
+]

@@ -1,0 +1,136 @@
+"""``build(spec, params) -> FrozenPipeline`` — the one-shot pipeline compiler.
+
+The deploy-side transform the FPGA flow performs after QAT, as a single
+call: fold BN into (w, b) (``spec.fuse``), export int8 weights
+(``spec.precision``), resolve the sampler/grouper/backend registry keys
+to callables, and jit the fixed-topology walk once.  The result is a
+:class:`FrozenPipeline` — an immutable, introspectable executable:
+
+    pipe = build(lite_spec(n_classes).serving(), params)
+    logits, state = pipe.infer(pts, state)
+    pipe.flops(); print(pipe.describe())
+
+``infer`` is stateless-functional: the URS LFSR state goes in and comes
+out (the paper's "same starting states" deployment contract); callers
+that hold state across calls (the serving engine) thread it themselves.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.api import registry
+from repro.api.spec import PipelineSpec
+
+
+def build(spec: PipelineSpec, params: Dict, *, jit: bool = True,
+          donate_lfsr: bool = False) -> "FrozenPipeline":
+    """Compile a spec + trained params into a frozen executable pipeline.
+
+    Args:
+      spec: the variant description (registry keys are resolved here —
+        a typo raises ``KeyError`` listing the registered names).
+      params: trained parameter tree (BN running stats populated when
+        ``spec.fuse``).
+      jit: wrap the forward in ``jax.jit`` (one executable per
+        ``(batch, n_points)`` shape).  ``jit=False`` gives the eager
+        walk — bit-identical to the legacy un-jitted entry points.
+      donate_lfsr: donate the LFSR argument buffer to each jitted call
+        (serving engines that immediately replace their state with the
+        returned one; invalid for callers that reuse the input buffer).
+    """
+    from repro.core import fusion
+    from repro.core.quant import QuantConfig, quantize_tree
+    from repro.models import pointmlp as PM
+
+    sampler, grouper, backend = registry.resolve(
+        spec.sampler, spec.grouper, spec.backend)
+    cfg = spec.to_model_config()
+    frozen = params
+    if spec.fuse:
+        frozen, cfg = fusion.fuse_pointmlp(frozen, cfg)
+    if spec.precision == "int8":
+        qcfg = QuantConfig(w_bits=min(spec.w_bits, 8), a_bits=spec.a_bits,
+                           per_channel=spec.per_channel,
+                           symmetric=spec.symmetric, backend="int8_ref")
+        frozen = quantize_tree(frozen, qcfg)
+        cfg = cfg.replace(quant=qcfg)
+    else:
+        cfg = cfg.replace(quant=QuantConfig(w_bits=32, a_bits=32))
+
+    def fwd(p, pts, lfsr):
+        return PM.pointmlp_infer_with(
+            p, cfg, pts, lfsr, sampler=sampler, grouper=grouper,
+            backend=backend, shared_urs=spec.shared_urs,
+            per_sample_norm=spec.per_sample_norm)
+
+    fn = jax.jit(fwd, donate_argnums=(2,) if donate_lfsr else ()) \
+        if jit else fwd
+    return FrozenPipeline(spec=spec, params=frozen, model_config=cfg,
+                          _fn=fn)
+
+
+@dataclasses.dataclass(frozen=True)
+class FrozenPipeline:
+    """An immutable compiled pipeline: frozen params + jitted walk.
+
+    Produced by :func:`build`; consumed directly or wrapped by
+    :class:`repro.serve.pointcloud.PointCloudEngine` for batched
+    queue-draining service.
+    """
+    spec: PipelineSpec
+    params: Dict
+    model_config: Any            # resolved deploy PointMLPConfig
+    _fn: Any = dataclasses.field(repr=False)
+
+    def infer(self, pts: jnp.ndarray,
+              lfsr_state: Optional[jnp.ndarray] = None
+              ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+        """Run the frozen pipeline.
+
+        Args:
+          pts: [B, N, 3] point clouds (N == spec.n_points).
+          lfsr_state: uint32 [>=B] LFSR streams (URS specs only).
+
+        Returns: (logits [B, n_classes], advanced LFSR state).
+        """
+        return self._fn(self.params, pts, lfsr_state)
+
+    def seed_state(self, seed: int, n_streams: int = 64) -> jnp.ndarray:
+        """Fresh LFSR streams for this pipeline's URS sampler — the
+        paper's "initialize the LFSRs with the same starting states"."""
+        from repro.core import sampling
+        return sampling.seed_streams(seed, n_streams)
+
+    def flops(self) -> int:
+        """Analytic MAC*2 count per sample (Table 2/3 derivations)."""
+        from repro.models import pointmlp as PM
+        return PM.pointmlp_flops(self.model_config)
+
+    def describe(self) -> str:
+        """Human-readable rendering of the compiled variant."""
+        from repro.core.quant import tree_size_bytes
+        s = self.spec
+        cfg = self.model_config
+        prec = (f"int8 (w{min(s.w_bits, 8)}/a{s.a_bits}, int8_ref matmul)"
+                if s.precision == "int8" else "fp32")
+        lines = [
+            f"FrozenPipeline({s.name})",
+            f"  topology  : {s.n_points} pts -> stages "
+            f"{cfg.stage_samples} x dims {cfg.stage_dims} -> "
+            f"{s.n_classes} classes",
+            f"  sampler   : {s.sampler}"
+            + (" (shared across batch)" if s.shared_urs else ""),
+            f"  grouper   : {s.grouper} (k={s.k_neighbors}, "
+            f"{s.affine_mode}"
+            + (", per-sample sigma)" if s.per_sample_norm else ")"),
+            f"  precision : {prec}",
+            f"  fusion    : {'BN folded into (w, b)' if s.fuse else 'off'}",
+            f"  backend   : {s.backend}",
+            f"  flops     : {self.flops() / 1e6:.1f} MFLOP/sample",
+            f"  params    : {tree_size_bytes(self.params)} bytes",
+        ]
+        return "\n".join(lines)

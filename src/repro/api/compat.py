@@ -1,0 +1,74 @@
+"""Legacy-surface shims: old kwargs -> PipelineSpec, with deprecation.
+
+The pre-spec API expressed variants through an ad-hoc mix of boolean
+kwargs (``use_pallas``, ``quantize``) and backend strings.  Everything
+here maps that surface onto :class:`~repro.api.spec.PipelineSpec` and
+emits a ``DeprecationWarning`` whose message starts with
+``"repro legacy API:"`` — the repo's pytest config escalates exactly
+that prefix to an error, so no in-tree caller can regress onto the old
+kwargs (external callers get a warning and keep working).
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Any, Optional
+
+from repro.api.spec import PipelineSpec
+
+_WARN_PREFIX = "repro legacy API: "
+
+#: legacy PointCloudEngine backend strings -> registry keys.  The old
+#: "pallas" meant the interpret-mode fused kernel (the CPU correctness
+#: canary); the real-TPU lowering is the new "pallas" registry entry.
+LEGACY_BACKEND_KEYS = {"ref": "ref", "pallas": "pallas_interpret"}
+
+
+def warn_legacy(what: str, instead: str, stacklevel: int = 3) -> None:
+    warnings.warn(f"{_WARN_PREFIX}{what} is deprecated; {instead}",
+                  DeprecationWarning, stacklevel=stacklevel)
+
+
+def spec_to_config(spec: PipelineSpec):
+    """Spec -> training-shape :class:`PointMLPConfig` (alias of
+    :meth:`PipelineSpec.to_model_config` for symmetry)."""
+    return spec.to_model_config()
+
+
+def config_to_spec(cfg: Any, **overrides) -> PipelineSpec:
+    """Legacy :class:`PointMLPConfig` -> spec (alias of
+    :meth:`PipelineSpec.from_model_config`)."""
+    return PipelineSpec.from_model_config(cfg, **overrides)
+
+
+def engine_legacy_spec(cfg: Any, quantize: Optional[bool],
+                       backend: Optional[str]) -> PipelineSpec:
+    """Map the legacy ``PointCloudEngine(params, cfg, quantize=, backend=)``
+    surface onto the spec the old constructor behaved as.
+
+    Reproduces the old semantics exactly: serve fused fp32 unless
+    ``quantize`` (QAT fake-quant noise dropped either way), int8 export
+    keeps the config's a_bits and clamps w_bits to 8, and a quantized
+    engine never routes through the fused-Pallas kernel.
+    """
+    quantize = bool(quantize) if quantize is not None else False
+    backend = backend if backend is not None else "pallas"
+    if backend not in LEGACY_BACKEND_KEYS:
+        raise ValueError(f"legacy backend must be one of "
+                         f"{sorted(LEGACY_BACKEND_KEYS)}, got {backend!r}")
+    warn_legacy(
+        "PointCloudEngine(params, cfg, quantize=..., backend=...)",
+        "pass a repro.api.PipelineSpec (e.g. "
+        "PipelineSpec.from_model_config(cfg, precision=..., "
+        "backend=...).serving())", stacklevel=4)
+    if quantize:
+        # per_channel/symmetric are lifted from cfg.quant by
+        # from_model_config when QAT was enabled (spec defaults match
+        # the old fresh-QuantConfig() path otherwise).
+        spec = PipelineSpec.from_model_config(
+            cfg, precision="int8", backend="ref",
+            w_bits=min(cfg.quant.w_bits, 8),
+            a_bits=cfg.quant.a_bits if cfg.quant.enabled else 8)
+    else:
+        spec = PipelineSpec.from_model_config(
+            cfg, precision="fp32", backend=LEGACY_BACKEND_KEYS[backend])
+    return spec.serving()

@@ -1,0 +1,171 @@
+"""String-keyed component registries for the pipeline API (HLS4PC §2).
+
+The paper's framework treats mapping operations (sample, group) and NN
+layers as interchangeable units of one configurable pipeline.  We encode
+that as three registries — samplers, groupers, backends — so a new
+component (a real-TPU Pallas path, a sharded sampler, a ball-query
+grouper) plugs in under a string key without touching the model walk:
+
+    @register_sampler("my-sampler")
+    def my_sampler(xyz, n_samples, lfsr_state, shared): ...
+
+``PipelineSpec`` fields name entries by key; ``repro.api.build`` (and
+the legacy ``pointmlp_infer`` wrapper) resolve keys to callables once,
+and the walk in ``repro.models.pointmlp`` consumes only the resolved
+callables.
+
+Entry contracts
+---------------
+sampler(xyz [B,N,3], n_samples, lfsr_state, shared) ->
+    (idx [B,S] int32, new_lfsr_state)
+grouper(xyz, feats, idx, k, affine_params, mode, per_sample_norm) ->
+    (new_xyz [B,S,3], center_feats [B,S,C], grouped [B,S,k,2C])
+backend(p, x, quant, act) -> y
+    — one Conv(+folded BN)(+ReLU) inference layer; ``p`` is a layer
+    param dict (``w`` may be an int8 export dict), ``quant`` a
+    QuantConfig or None, ``act`` whether to apply ReLU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict
+
+
+class Registry:
+    """A named string-key -> callable table with decorator registration.
+
+    Re-registration of an existing key raises (plugins must pick fresh
+    names); unknown-key lookup raises a ``KeyError`` that lists every
+    registered name, so typos are self-diagnosing.
+    """
+
+    def __init__(self, kind: str):
+        self.kind = kind
+        self._entries: Dict[str, Callable] = {}
+
+    def register(self, name: str) -> Callable[[Callable], Callable]:
+        def deco(fn: Callable) -> Callable:
+            if name in self._entries:
+                raise ValueError(
+                    f"{self.kind} {name!r} is already registered; "
+                    f"unregister it first or pick a new name")
+            self._entries[name] = fn
+            return fn
+        return deco
+
+    def unregister(self, name: str) -> None:
+        self._entries.pop(name, None)
+
+    def get(self, name: str) -> Callable:
+        try:
+            return self._entries[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown {self.kind} {name!r}; registered {self.kind}s: "
+                f"{', '.join(self.names())}") from None
+
+    def names(self) -> tuple:
+        return tuple(sorted(self._entries))
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._entries
+
+
+SAMPLERS = Registry("sampler")
+GROUPERS = Registry("grouper")
+BACKENDS = Registry("backend")
+
+register_sampler = SAMPLERS.register
+register_grouper = GROUPERS.register
+register_backend = BACKENDS.register
+
+
+# ------------------------------------------------- builtin samplers -----
+# Imports are deferred into the entry bodies: this module sits below
+# ``repro.models.pointmlp`` in the import graph, and the lazy imports
+# keep it free of heavyweight (or cyclic) module loads.
+
+@register_sampler("fps")
+def _fps_sampler(xyz, n_samples: int, lfsr_state, shared: bool):
+    """Farthest Point Sampling — data-dependent, stateless."""
+    from repro.core import sampling
+    return sampling.fps_batched(xyz, n_samples), lfsr_state
+
+
+@register_sampler("urs")
+def _urs_sampler(xyz, n_samples: int, lfsr_state, shared: bool):
+    """LFSR-driven Uniform Random Sampling (HLS4PC §2.1).
+
+    ``shared`` serves the whole batch from one index sequence — the
+    hardware has a single LFSR-driven URS unit in the pipeline, so a
+    request's result is independent of its batch slot (the serving
+    engine's queue-order-invariance contract).
+    """
+    import jax.numpy as jnp
+
+    from repro.core import sampling
+    assert lfsr_state is not None, "URS sampler needs an LFSR state"
+    b, n = xyz.shape[0], xyz.shape[1]
+    if shared:
+        new_state, idx = sampling.urs_indices(lfsr_state, n, n_samples)
+        return jnp.broadcast_to(idx[None, :], (b, n_samples)), new_state
+    new_state, idx = sampling.urs_indices_batched(
+        lfsr_state, n, n_samples, batch=b)
+    return idx, new_state
+
+
+# ------------------------------------------------- builtin groupers -----
+
+@register_grouper("knn")
+def _knn_grouper(xyz, feats, idx, k: int, affine_params, mode: str,
+                 per_sample_norm: bool):
+    """KNN group + geometric-affine normalize (HLS4PC §2.1, Fig. 2)."""
+    from repro.core import knn as knn_core
+    return knn_core.group_points(xyz, feats, idx, k, affine_params, mode,
+                                 per_sample_norm=per_sample_norm)
+
+
+# ------------------------------------------------- builtin backends -----
+
+def _cbr_ref(p, x, quant, act: bool):
+    import jax
+
+    from repro.models import layers as L
+    y = L.conv1d_apply(p, x, quant=quant)
+    return jax.nn.relu(y) if act else y
+
+
+def _cbr_fused_pallas(p, x, quant, act: bool, interpret: bool):
+    """Fused fp32 layers through the single-pass ``fused_linear`` kernel.
+
+    Only a *frozen* layer qualifies — plain fp32 2-D matmul weight, BN
+    already folded, no quantization; anything else (int8 export dicts,
+    unfused BN, fake-quant) falls back to the reference lowering, so one
+    backend entry serves mixed trees.
+    """
+    import jax.numpy as jnp
+    w = p["w"]
+    if (not isinstance(w, dict) and getattr(w, "ndim", 0) == 2
+            and "bn" not in p and quant is None):
+        from repro.kernels.fused_linear import fused_linear_pallas
+        b = p.get("b")
+        if b is None:
+            b = jnp.zeros((w.shape[1],), w.dtype)
+        y = fused_linear_pallas(x.reshape(-1, w.shape[0]), w, b,
+                                activation="relu" if act else "none",
+                                interpret=interpret)
+        return y.reshape(*x.shape[:-1], w.shape[1])
+    return _cbr_ref(p, x, quant, act)
+
+
+BACKENDS.register("ref")(_cbr_ref)
+BACKENDS.register("pallas_interpret")(
+    functools.partial(_cbr_fused_pallas, interpret=True))
+BACKENDS.register("pallas")(
+    functools.partial(_cbr_fused_pallas, interpret=False))
+
+
+def resolve(sampler: str, grouper: str, backend: str
+            ) -> tuple:
+    """Resolve the three registry keys of a spec to callables at once."""
+    return SAMPLERS.get(sampler), GROUPERS.get(grouper), BACKENDS.get(backend)

@@ -1,0 +1,192 @@
+"""PipelineSpec — the declarative parametrization of one pipeline variant.
+
+HLS4PC's contribution is that sampler choice (FPS vs URS), affine mode,
+bit-width, and fusion are *knobs of one template*, not code forks.  A
+:class:`PipelineSpec` is that template's knob sheet: a frozen dataclass
+naming every choice — topology, sampler/grouper/backend registry keys,
+precision policy, fusion, batch semantics — which ``repro.api.build``
+compiles once into a :class:`~repro.api.build.FrozenPipeline`.
+
+The paper's Table 1 ladder becomes data::
+
+    elite_spec()   # FPS, learnable affine, fp32, 1024 points
+    m2_spec()      # URS, alpha/beta pruned, fp32, 512 points
+    lite_spec()    # M-2 topology + int8 w8/a8 deployment
+
+and a new ROADMAP scaling step (real-TPU backend, sharded sampler) is a
+new registry entry named by a spec field — no new signatures.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+from repro.api import registry
+
+PRECISIONS = ("fp32", "int8")
+AFFINE_MODES = ("affine", "norm", "center")
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineSpec:
+    """One pipeline variant, fully described.
+
+    Topology fields mirror :class:`repro.models.pointmlp.PointMLPConfig`
+    (the spec is the public surface; the model config is the internal
+    walk parametrization — convert with :meth:`to_model_config` /
+    :meth:`from_model_config`).
+
+    Component fields are registry keys (``repro.api.registry``):
+      sampler: ``fps`` | ``urs`` (| any registered plugin)
+      grouper: ``knn``
+      backend: ``ref`` | ``pallas_interpret`` | ``pallas``
+
+    Policy fields:
+      precision: ``fp32`` serves fused fp32 (QAT fake-quant noise is
+        dropped — deployment runs frozen arithmetic); ``int8`` exports
+        fused weights to int8 (``w_bits``/``a_bits`` give the exact
+        deployment precision of the Fig. 4 ladder).
+      fuse: fold BN into (w, b) at build time (HLS4PC §2.2).
+      shared_urs / per_sample_norm: streaming-batch semantics — one
+        sampler services the whole batch and every cloud normalizes
+        with its own statistics (queue-order invariance; pad lanes
+        cannot leak).  See :meth:`serving`.
+    """
+    name: str = "pointmlp-elite"
+    # ---- topology (PointMLP walk) ----
+    n_points: int = 1024
+    n_classes: int = 40
+    embed_dim: int = 32
+    k_neighbors: int = 16
+    stage_expansion: Tuple[int, ...] = (2, 2, 2, 2)
+    pre_blocks: Tuple[int, ...] = (1, 1, 2, 1)
+    pos_blocks: Tuple[int, ...] = (1, 1, 2, 1)
+    res_expansion: float = 0.25
+    affine_mode: str = "affine"
+    # ---- components (registry keys) ----
+    sampler: str = "fps"
+    grouper: str = "knn"
+    backend: str = "ref"
+    # ---- precision / fusion policy ----
+    precision: str = "fp32"
+    w_bits: int = 8
+    a_bits: int = 8
+    per_channel: bool = True
+    symmetric: bool = True
+    fuse: bool = True
+    # ---- batch semantics ----
+    shared_urs: bool = False
+    per_sample_norm: bool = False
+
+    def __post_init__(self):
+        if self.precision not in PRECISIONS:
+            raise ValueError(f"precision must be one of {PRECISIONS}, "
+                             f"got {self.precision!r}")
+        if self.affine_mode not in AFFINE_MODES:
+            raise ValueError(f"affine_mode must be one of {AFFINE_MODES}, "
+                             f"got {self.affine_mode!r}")
+
+    def replace(self, **kw) -> "PipelineSpec":
+        return dataclasses.replace(self, **kw)
+
+    def serving(self) -> "PipelineSpec":
+        """The streaming-deployment rendering of this spec: one sampler
+        services the batch, per-cloud normalization statistics — the
+        serving engine's queue-order-invariance contract."""
+        return self.replace(shared_urs=True, per_sample_norm=True)
+
+    def validate(self) -> "PipelineSpec":
+        """Resolve every registry key (raises ``KeyError`` listing the
+        registered names on a typo); returns self for chaining."""
+        registry.resolve(self.sampler, self.grouper, self.backend)
+        return self
+
+    # ------------------------------------------- model-config bridge ----
+
+    def to_model_config(self):
+        """The internal walk parametrization for this spec.
+
+        ``use_bn=True`` / QAT fake-quant: the *training-shape* config —
+        ``repro.api.build`` derives the deployment config (fused,
+        exported) from it.  ``precision="int8"`` maps to w/a-bit QAT so
+        training under a spec matches the paper's flow (QAT first, fuse
+        and export after).
+        """
+        from repro.core.quant import QuantConfig
+        from repro.models.pointmlp import PointMLPConfig
+        if self.precision == "int8":
+            quant = QuantConfig(w_bits=self.w_bits, a_bits=self.a_bits,
+                                per_channel=self.per_channel,
+                                symmetric=self.symmetric)
+        else:
+            quant = QuantConfig(w_bits=32, a_bits=32)
+        return PointMLPConfig(
+            name=self.name, n_points=self.n_points, n_classes=self.n_classes,
+            embed_dim=self.embed_dim, k_neighbors=self.k_neighbors,
+            stage_expansion=self.stage_expansion, pre_blocks=self.pre_blocks,
+            pos_blocks=self.pos_blocks, res_expansion=self.res_expansion,
+            sampler=self.sampler, affine_mode=self.affine_mode, quant=quant)
+
+    @classmethod
+    def from_model_config(cls, cfg, **overrides) -> "PipelineSpec":
+        """Lift a legacy :class:`PointMLPConfig` into a spec.
+
+        An enabled quant config maps to ``precision="int8"`` with its
+        w/a bits and scale policy preserved exactly (so
+        :meth:`to_model_config` round-trips; the int8 *export* in
+        ``repro.api.build`` clamps w_bits to 8 at deploy time).  Pass
+        ``precision="fp32"`` in ``overrides`` to serve the fused-fp32
+        deployment of a QAT-trained config.
+        """
+        fields = dict(
+            name=cfg.name, n_points=cfg.n_points, n_classes=cfg.n_classes,
+            embed_dim=cfg.embed_dim, k_neighbors=cfg.k_neighbors,
+            stage_expansion=cfg.stage_expansion, pre_blocks=cfg.pre_blocks,
+            pos_blocks=cfg.pos_blocks, res_expansion=cfg.res_expansion,
+            sampler=cfg.sampler, affine_mode=cfg.affine_mode,
+            precision="fp32")
+        if cfg.quant.enabled:
+            fields.update(precision="int8",
+                          w_bits=cfg.quant.w_bits,
+                          a_bits=cfg.quant.a_bits,
+                          per_channel=cfg.quant.per_channel,
+                          symmetric=cfg.quant.symmetric)
+        fields.update(overrides)
+        return cls(**fields)
+
+
+# ------------------------------------------------- paper variants -------
+
+def elite_spec(n_classes: int = 40, **overrides) -> PipelineSpec:
+    """PointMLP-Elite: FPS, learnable affine, fp32, 1024 points."""
+    fields = dict(name="pointmlp-elite", n_classes=n_classes)
+    fields.update(overrides)
+    return PipelineSpec(**fields)
+
+
+def m2_spec(n_classes: int = 40, **overrides) -> PipelineSpec:
+    """M-2 of Table 1: 512 points, URS, alpha/beta pruned, BN fused."""
+    fields = dict(name="pointmlp-m2", n_points=512, sampler="urs",
+                  affine_mode="norm", n_classes=n_classes)
+    fields.update(overrides)
+    return PipelineSpec(**fields)
+
+
+def lite_spec(n_classes: int = 40, **overrides) -> PipelineSpec:
+    """PointMLP-Lite: M-2 topology + 8/8 int8 deployment (Fig. 4 Pareto
+    point)."""
+    fields = dict(name="pointmlp-lite", precision="int8", w_bits=8,
+                  a_bits=8)
+    fields.update(overrides)
+    return m2_spec(n_classes).replace(**fields)
+
+
+def compression_ladder_specs(n_classes: int = 40) -> List[PipelineSpec]:
+    """The Table 1 ladder as specs: Elite, M-1..M-4, Lite.
+
+    Lifted from ``repro.core.compress.compression_ladder`` (deferred
+    import — ``core.compress`` sits above the models in the import
+    graph) so the ladder has exactly one source of truth."""
+    from repro.core.compress import compression_ladder
+    return [PipelineSpec.from_model_config(cfg)
+            for cfg in compression_ladder(n_classes)]

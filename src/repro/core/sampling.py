@@ -94,10 +94,16 @@ def urs_indices(state: jnp.ndarray, n_points: int, n_samples: int,
     return new_state, idx
 
 
+@functools.partial(jax.jit, static_argnames=("n_points", "n_samples",
+                                             "batch", "nbits"))
 def urs_indices_batched(state: jnp.ndarray, n_points: int, n_samples: int,
                         batch: int, nbits: int = 16
                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Per-batch-element URS using one LFSR stream per element.
+
+    Jitted with static shape arguments (like its sibling
+    :func:`urs_indices`) so the mod/transpose epilogue compiles once per
+    (n_points, n_samples, batch) instead of retracing every call.
 
     Returns (new_state [batch], indices [batch, n_samples]).
     """

@@ -22,8 +22,8 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.api import registry as api_registry
 from repro.core import knn as knn_core
-from repro.core import sampling
 from repro.core.quant import QuantConfig
 from repro.models import layers as L
 
@@ -129,30 +129,6 @@ def count_conv_layers(cfg: PointMLPConfig) -> int:
 
 # ------------------------------------------------------------ apply -----
 
-def _cbr_infer(p: Dict, x: jnp.ndarray, cfg: PointMLPConfig,
-               act: bool = True, use_pallas: bool = False) -> jnp.ndarray:
-    """Pure inference Conv(+BN)(+ReLU): no stat updates, no params return.
-
-    When ``use_pallas`` and the block is already fused (no ``bn``, plain
-    fp32 matmul weight), the whole layer goes through the single-pass
-    ``repro.kernels.fused_linear`` kernel — the TPU rendering of the
-    FPGA's streaming Conv→BN→ReLU stage (interpret mode on CPU).
-    """
-    quant = cfg.quant if cfg.quant.enabled else None
-    w = p["w"]
-    if (use_pallas and not isinstance(w, dict) and w.ndim == 2
-            and "bn" not in p and quant is None):
-        from repro.kernels.fused_linear import fused_linear_pallas
-        b = p.get("b")
-        if b is None:
-            b = jnp.zeros((w.shape[1],), w.dtype)
-        y = fused_linear_pallas(x.reshape(-1, w.shape[0]), w, b,
-                                activation="relu" if act else "none")
-        return y.reshape(*x.shape[:-1], w.shape[1])
-    y = L.conv1d_apply(p, x, quant=quant)
-    return jax.nn.relu(y) if act else y
-
-
 def _cbr_apply(p: Dict, x: jnp.ndarray, cfg: PointMLPConfig, train: bool,
                act: bool = True) -> Tuple[jnp.ndarray, Dict]:
     """Conv(+BN)(+ReLU); in train mode BN uses batch stats and returns a
@@ -181,41 +157,31 @@ def _cbr_apply(p: Dict, x: jnp.ndarray, cfg: PointMLPConfig, train: bool,
     return y, p_new
 
 
-def _sample_indices(cfg: PointMLPConfig, xyz: jnp.ndarray, n_samples: int,
-                    lfsr_state: Optional[jnp.ndarray], shared_urs: bool
-                    ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
-    b, n = xyz.shape[0], xyz.shape[1]
-    if cfg.sampler == "fps":
-        return sampling.fps_batched(xyz, n_samples), lfsr_state
-    assert lfsr_state is not None, "URS sampler needs an LFSR state"
-    if shared_urs:
-        # One sampler module services the whole batch (the hardware has a
-        # single LFSR-driven URS unit in the pipeline): every element of
-        # the batch sees the same index sequence, so a request's result is
-        # independent of its slot — the serving engine's queue-order
-        # invariance contract.
-        new_state, idx = sampling.urs_indices(lfsr_state, n, n_samples)
-        return jnp.broadcast_to(idx[None, :], (b, n_samples)), new_state
-    new_state, idx = sampling.urs_indices_batched(
-        lfsr_state, n, n_samples, b)
-    return idx, new_state
-
-
 def _forward(params: Dict, cfg: PointMLPConfig, xyz: jnp.ndarray,
-             lfsr_state: Optional[jnp.ndarray], train: bool,
-             use_pallas: bool = False, shared_urs: bool = False,
-             per_sample_norm: bool = False
+             lfsr_state: Optional[jnp.ndarray], train: bool, *,
+             sampler, grouper, backend,
+             shared_urs: bool = False, per_sample_norm: bool = False
              ) -> Tuple[jnp.ndarray, Dict, Optional[jnp.ndarray]]:
-    """Shared topology walk.  ``train`` selects the stat-threading CBR
-    (functional BN updates) vs the pure inference CBR; the walk itself —
-    embed → 4×(sample, group, transfer, pre, pool, pos) → head — is
-    written once for both."""
+    """Shared topology walk over *resolved* pipeline components.
+
+    ``sampler`` / ``grouper`` / ``backend`` are callables resolved from
+    ``repro.api.registry`` (the walk never string-dispatches): the
+    sampler picks stage centroids, the grouper builds normalized local
+    neighborhoods, and the backend lowers each inference CBR layer
+    (reference jnp, fused-Pallas interpret, or real Pallas).  ``train``
+    selects the stat-threading CBR (functional BN updates; the backend
+    is bypassed — training always runs the reference lowering) vs the
+    backend-lowered inference CBR; the walk itself — embed →
+    4×(sample, group, transfer, pre, pool, pos) → head — is written
+    once for both.
+    """
+    quant = cfg.quant if cfg.quant.enabled else None
     if train:
         def cbr(p, x, act=True):
             return _cbr_apply(p, x, cfg, True, act)
     else:
         def cbr(p, x, act=True):
-            return _cbr_infer(p, x, cfg, act, use_pallas), p
+            return backend(p, x, quant, act), p
 
     def res(p, x):
         h, n1 = cbr(p["net1"], x)
@@ -229,12 +195,11 @@ def _forward(params: Dict, cfg: PointMLPConfig, xyz: jnp.ndarray,
     new_stages = []
     for s, st in enumerate(params["stages"]):
         n_samp = cfg.stage_samples[s]
-        idx, lfsr_state = _sample_indices(cfg, cur_xyz, n_samp, lfsr_state,
-                                          shared_urs)
+        idx, lfsr_state = sampler(cur_xyz, n_samp, lfsr_state, shared_urs)
         affine = st.get("affine")
-        cur_xyz, _, grouped = knn_core.group_points(
+        cur_xyz, _, grouped = grouper(
             cur_xyz, cur, idx, cfg.k_neighbors, affine, cfg.affine_mode,
-            per_sample_norm=per_sample_norm)
+            per_sample_norm)
         st_new = dict(st)
         h, st_new["transfer"] = cbr(st["transfer"], grouped)    # [B,S,k,C]
         pre_new = []
@@ -256,10 +221,34 @@ def _forward(params: Dict, cfg: PointMLPConfig, xyz: jnp.ndarray,
     head = params["head"]
     h, f1 = cbr(head["fc1"], g)
     h, f2 = cbr(head["fc2"], h)
-    logits = L.conv1d_apply(head["fc3"], h,
-                            quant=cfg.quant if cfg.quant.enabled else None)
+    logits = L.conv1d_apply(head["fc3"], h, quant=quant)
     new_params["head"] = {"fc1": f1, "fc2": f2, "fc3": head["fc3"]}
     return logits, new_params, lfsr_state
+
+
+def pointmlp_infer_with(params: Dict, cfg: PointMLPConfig,
+                        xyz: jnp.ndarray,
+                        lfsr_state: Optional[jnp.ndarray] = None, *,
+                        sampler, grouper, backend,
+                        shared_urs: bool = False,
+                        per_sample_norm: bool = False
+                        ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """Inference forward over resolved pipeline components.
+
+    The spec-era hot path: ``repro.api.build`` resolves a
+    :class:`~repro.api.spec.PipelineSpec`'s registry keys once and jits
+    this entry.  No BN-stat threading and no new-params return — with
+    fused params every CBR is a single matmul+bias+ReLU lowered by
+    ``backend``.
+
+    Returns: (logits [B, n_classes], advanced lfsr state).
+    """
+    logits, _, lfsr_state = _forward(params, cfg, xyz, lfsr_state,
+                                     train=False, sampler=sampler,
+                                     grouper=grouper, backend=backend,
+                                     shared_urs=shared_urs,
+                                     per_sample_norm=per_sample_norm)
+    return logits, lfsr_state
 
 
 def pointmlp_infer(params: Dict, cfg: PointMLPConfig, xyz: jnp.ndarray,
@@ -267,11 +256,13 @@ def pointmlp_infer(params: Dict, cfg: PointMLPConfig, xyz: jnp.ndarray,
                    use_pallas: bool = False, shared_urs: bool = False,
                    per_sample_norm: bool = False
                    ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
-    """Pure inference forward — the deployment hot path.
+    """Pure inference forward — legacy kwarg surface.
 
-    No BN-stat threading and no new-params return: with fused params
-    (``repro.core.fusion.fuse_pointmlp``) every CBR is a single
-    matmul+bias+ReLU, optionally routed through the fused Pallas kernel.
+    Thin resolver over :func:`pointmlp_infer_with`: ``cfg.sampler`` and
+    ``use_pallas`` are mapped to registry entries (``use_pallas`` names
+    the interpret-mode fused kernel — the CPU correctness canary).  New
+    code should build a :class:`~repro.api.spec.PipelineSpec` and use
+    ``repro.api.build`` instead.
 
     Args:
       xyz: [B, N, 3] point coordinates (N == cfg.n_points).
@@ -285,11 +276,12 @@ def pointmlp_infer(params: Dict, cfg: PointMLPConfig, xyz: jnp.ndarray,
 
     Returns: (logits [B, n_classes], advanced lfsr state).
     """
-    logits, _, lfsr_state = _forward(params, cfg, xyz, lfsr_state,
-                                     train=False, use_pallas=use_pallas,
-                                     shared_urs=shared_urs,
-                                     per_sample_norm=per_sample_norm)
-    return logits, lfsr_state
+    sampler, grouper, backend = api_registry.resolve(
+        cfg.sampler, "knn", "pallas_interpret" if use_pallas else "ref")
+    return pointmlp_infer_with(params, cfg, xyz, lfsr_state,
+                               sampler=sampler, grouper=grouper,
+                               backend=backend, shared_urs=shared_urs,
+                               per_sample_norm=per_sample_norm)
 
 
 def pointmlp_apply(params: Dict, cfg: PointMLPConfig, xyz: jnp.ndarray,
@@ -308,7 +300,10 @@ def pointmlp_apply(params: Dict, cfg: PointMLPConfig, xyz: jnp.ndarray,
     if not train:
         logits, lfsr_state = pointmlp_infer(params, cfg, xyz, lfsr_state)
         return logits, params, lfsr_state
-    return _forward(params, cfg, xyz, lfsr_state, train=True)
+    sampler, grouper, backend = api_registry.resolve(cfg.sampler, "knn",
+                                                     "ref")
+    return _forward(params, cfg, xyz, lfsr_state, train=True,
+                    sampler=sampler, grouper=grouper, backend=backend)
 
 
 def pointmlp_flops(cfg: PointMLPConfig) -> int:

@@ -1,14 +1,14 @@
 """Batched point-cloud inference engine (HLS4PC deployment path).
 
-The serving analogue of the paper's streaming FPGA pipeline: a trained
-PointMLP is *frozen* once — BN folded into (w, b) via
-``repro.core.fusion.fuse_pointmlp`` and optionally exported to int8 via
-``repro.core.quant`` — then a jitted fixed-shape ``classify`` drains a
-ragged request queue in pad-to-batch chunks.  No training-time machinery
-(BN-stat threading, per-call FPS) survives in the hot path:
+The serving analogue of the paper's streaming FPGA pipeline: a
+:class:`~repro.api.spec.PipelineSpec` is compiled once by
+``repro.api.build`` — BN folded into (w, b), optional int8 export, the
+sampler/grouper/backend registry keys resolved, the fixed-shape forward
+jitted — and the engine drains a ragged request queue in pad-to-batch
+chunks against that frozen executable:
 
-* fused fp32 layers route through the single-pass
-  ``repro.kernels.fused_linear`` Pallas kernel (interpret mode on CPU);
+* fused fp32 layers lower through whatever backend entry the spec
+  names (``ref`` | ``pallas_interpret`` | ``pallas``);
 * the URS sampler runs off a *persistent* LFSR state held by the engine
   — the deployment PRNG contract of the paper: one sampler module
   services the whole batch, so results are queue-order invariant and
@@ -16,18 +16,27 @@ ragged request queue in pad-to-batch chunks.  No training-time machinery
 * the LFSR buffer is donated to each jitted call, and the one
   ``(max_batch, n_points)`` executable ``classify`` dispatches can be
   compiled ahead of traffic with ``warmup()``.
+
+Legacy construction — ``PointCloudEngine(params, cfg, quantize=True,
+backend="pallas")`` — still works through ``repro.api.compat`` and
+emits a ``DeprecationWarning`` (escalated to an error for in-tree
+callers by the pytest config).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import fusion, quant, sampling
-from repro.models import pointmlp as PM
+from repro.api import compat
+from repro.api.build import build
+from repro.api.spec import PipelineSpec
+from repro.core import sampling
+
+_UNSET = object()
 
 
 @dataclasses.dataclass
@@ -36,81 +45,61 @@ class PointCloudStats:
     batches: int = 0           # jitted fixed-shape dispatches
     padded: int = 0            # dummy pad samples computed
     compile_s: float = 0.0     # time spent in warmup compiles
-    serve_s: float = 0.0       # time spent in classify (steady state)
+    serve_s: float = 0.0       # device time in the jitted dispatch loop
+    host_s: float = 0.0        # host-side padding / array conversion
 
     @property
     def samples_per_s(self) -> float:
+        """Device throughput: host-side queue prep (array conversion,
+        pad-to-batch) is tracked separately in ``host_s``."""
         return self.requests / max(self.serve_s, 1e-9)
+
+    def reset(self) -> None:
+        """Zero every counter/timer (a fresh measurement window)."""
+        fresh = PointCloudStats()
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, getattr(fresh, f.name))
 
 
 class PointCloudEngine:
-    """Fixed-shape batched classifier over a frozen PointMLP.
+    """Fixed-shape batched classifier over a frozen pipeline.
 
     Args:
       params: trained parameter tree (BN running stats populated).
-      cfg: the training :class:`~repro.models.pointmlp.PointMLPConfig`.
+      spec: a :class:`~repro.api.spec.PipelineSpec` naming the variant
+        to freeze and serve — typically ``lite_spec(...).serving()``;
+        ``.serving()`` turns on the streaming-batch semantics (shared
+        URS sampler + per-cloud normalization) that make results
+        queue-order invariant and keep pad lanes from leaking.  A
+        legacy :class:`~repro.models.pointmlp.PointMLPConfig` is also
+        accepted together with the old ``quantize=``/``backend=``
+        kwargs, mapped through ``repro.api.compat`` with a
+        ``DeprecationWarning``.
       max_batch: fixed dispatch batch; ragged queues are padded/chunked.
-      quantize: export fused weights to int8 (``int8_ref`` backend);
-        otherwise serve fused fp32 (fake-quant QAT noise is dropped —
-        deployment runs the frozen arithmetic, not the QAT simulation).
-      backend: ``"pallas"`` routes fused fp32 layers through
-        ``repro.kernels.fused_linear`` (interpret mode on CPU);
-        ``"ref"`` uses the plain jnp path.  int8 always uses the
-        reference int8 matmul.
       seed: LFSR seed — must match training for the paper's
         "same starting states" deployment contract.
     """
 
-    def __init__(self, params: Dict, cfg: PM.PointMLPConfig,
-                 max_batch: int = 8, quantize: bool = False,
-                 backend: str = "pallas", seed: int = 0):
-        assert backend in ("pallas", "ref")
-        fused, icfg = fusion.fuse_pointmlp(params, cfg)
-        if quantize:
-            qcfg = dataclasses.replace(
-                cfg.quant if cfg.quant.enabled else quant.QuantConfig(),
-                w_bits=min(cfg.quant.w_bits, 8), backend="int8_ref")
-            self.params = quant.quantize_tree(fused, qcfg)
-            icfg = icfg.replace(quant=qcfg)
-        else:
-            self.params = fused
-            icfg = icfg.replace(quant=quant.QuantConfig(w_bits=32,
-                                                        a_bits=32))
-        self.cfg = icfg
+    def __init__(self, params: Dict, spec, max_batch: int = 8,
+                 quantize=_UNSET, backend=_UNSET, seed: int = 0):
+        if isinstance(spec, PipelineSpec):
+            if quantize is not _UNSET or backend is not _UNSET:
+                raise TypeError(
+                    "quantize=/backend= are legacy kwargs; with a "
+                    "PipelineSpec, set spec.precision / spec.backend")
+            spec.validate()
+        else:  # legacy (cfg, quantize=, backend=) surface
+            spec = compat.engine_legacy_spec(
+                spec,
+                quantize=None if quantize is _UNSET else quantize,
+                backend=None if backend is _UNSET else backend)
         self.max_batch = int(max_batch)
-        self.quantized = bool(quantize)
-        self.use_pallas = backend == "pallas" and not quantize
+        self.pipeline = build(spec, params, donate_lfsr=True)
+        self.spec = self.pipeline.spec
+        self.cfg = self.pipeline.model_config
+        self.params = self.pipeline.params
         self.stats = PointCloudStats()
         self._lfsr = sampling.seed_streams(seed, max(self.max_batch, 64))
-        self._jitted = None
-
-    # ------------------------------------------------- compile cache ----
-
-    @property
-    def _fn(self):
-        """The jitted fixed-shape forward.
-
-        ``jax.jit`` caches one executable per ``(batch, n_points)``
-        argument shape; the engine dispatches exactly one —
-        ``(max_batch, cfg.n_points)`` — which :meth:`warmup`
-        precompiles.  The LFSR buffer (arg 2) is donated: the engine
-        immediately replaces its state with the returned one, so the
-        old buffer can be reused in place by the runtime.
-        """
-        if self._jitted is None:
-            cfg, up = self.cfg, self.use_pallas
-
-            def fwd(params, pts, lfsr):
-                # shared_urs + per_sample_norm = streaming deployment
-                # semantics: one sampler services the batch and every
-                # cloud normalizes with its own statistics, so results
-                # are queue-order invariant and pad lanes cannot leak.
-                return PM.pointmlp_infer(params, cfg, pts, lfsr,
-                                         use_pallas=up, shared_urs=True,
-                                         per_sample_norm=True)
-
-            self._jitted = jax.jit(fwd, donate_argnums=(2,))
-        return self._jitted
 
     def warmup(self) -> float:
         """Compile the ``(max_batch, n_points)`` executable — the one
@@ -119,13 +108,29 @@ class PointCloudEngine:
         b = self.max_batch
         dummy = jnp.zeros((b, self.cfg.n_points, 3), jnp.float32)
         t0 = time.time()
-        logits, _ = self._fn(self.params, dummy, jnp.array(self._lfsr))
+        logits, _ = self.pipeline.infer(dummy, jnp.array(self._lfsr))
         logits.block_until_ready()
         dt = time.time() - t0
         self.stats.compile_s += dt
         return dt
 
     # ------------------------------------------------------- serving ----
+
+    def _chunk_queue(self, pts: jnp.ndarray) -> List[jnp.ndarray]:
+        """Host-side queue prep: split to ``max_batch`` chunks, zero-pad
+        the last.  Kept out of the serve timer — it is array plumbing,
+        not device throughput."""
+        r, n = pts.shape[0], pts.shape[1]
+        chunks = []
+        for i in range(0, r, self.max_batch):
+            chunk = pts[i:i + self.max_batch]
+            pad = self.max_batch - chunk.shape[0]
+            if pad:
+                chunk = jnp.concatenate(
+                    [chunk, jnp.zeros((pad, n, 3), jnp.float32)], axis=0)
+                self.stats.padded += pad
+            chunks.append(chunk)
+        return chunks
 
     def classify(self, points) -> jnp.ndarray:
         """Classify a ragged queue of point clouds.
@@ -137,7 +142,11 @@ class PointCloudEngine:
 
         Returns: logits [R, n_classes] — rows only for the R real
         requests; pad lanes are computed but never returned.
+
+        ``stats.serve_s`` times only the jitted dispatch loop (device
+        work); padding/conversion lands in ``stats.host_s``.
         """
+        t_host = time.time()
         pts = jnp.asarray(points, jnp.float32)
         if pts.size == 0:                           # drained queue
             return jnp.zeros((0, self.cfg.n_classes), jnp.float32)
@@ -146,20 +155,15 @@ class PointCloudEngine:
         r, n = pts.shape[0], pts.shape[1]
         assert n == self.cfg.n_points, \
             f"engine is fixed-shape: got N={n}, expected {self.cfg.n_points}"
-        fn = self._fn
+        chunks = self._chunk_queue(pts)
+        self.stats.host_s += time.time() - t_host
+
         t0 = time.time()
         out = []
-        for i in range(0, r, self.max_batch):
-            chunk = pts[i:i + self.max_batch]
-            real = chunk.shape[0]
-            pad = self.max_batch - real
-            if pad:
-                chunk = jnp.concatenate(
-                    [chunk, jnp.zeros((pad, n, 3), jnp.float32)], axis=0)
-            logits, self._lfsr = fn(self.params, chunk, self._lfsr)
-            out.append(logits[:real])
+        for j, chunk in enumerate(chunks):
+            logits, self._lfsr = self.pipeline.infer(chunk, self._lfsr)
+            out.append(logits[:min(self.max_batch, r - j * self.max_batch)])
             self.stats.batches += 1
-            self.stats.padded += pad
         jax.block_until_ready(out[-1])
         self.stats.serve_s += time.time() - t0
         self.stats.requests += r
@@ -168,6 +172,11 @@ class PointCloudEngine:
     def predict(self, points) -> jnp.ndarray:
         """Top-1 class ids [R] for a ragged queue."""
         return jnp.argmax(self.classify(points), axis=-1).astype(jnp.int32)
+
+    def describe(self) -> str:
+        """The frozen pipeline's description plus serving shape."""
+        return (f"{self.pipeline.describe()}\n"
+                f"  max_batch : {self.max_batch}")
 
     @property
     def lfsr_state(self) -> jnp.ndarray:

@@ -1,0 +1,301 @@
+"""PipelineSpec / registry / build contracts (the public pipeline API).
+
+Golden-equivalence: ``build(spec).infer`` must be *bit-identical* —
+logits and LFSR trajectory — to the pre-spec ``pointmlp_infer`` /
+``PointCloudEngine`` paths for the fp32-ref, fp32-pallas and int8
+deployments.  Registry: unknown keys self-diagnose, re-registration
+raises.  Compat: the legacy engine kwargs still work, warn, and produce
+the very same logits as the explicit spec.
+"""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (BACKENDS, GROUPERS, SAMPLERS, PipelineSpec, build,
+                       compression_ladder_specs, elite_spec, lite_spec,
+                       m2_spec, register_sampler)
+from repro.core import fusion, quant, sampling
+from repro.core.quant import QuantConfig
+from repro.data import pointclouds
+from repro.models import pointmlp as PM
+from repro.serve.pointcloud import PointCloudEngine
+
+KEY = jax.random.PRNGKey(0)
+
+
+def tiny(cfg: PM.PointMLPConfig) -> PM.PointMLPConfig:
+    return cfg.replace(n_points=128, embed_dim=16, n_classes=8,
+                       k_neighbors=8)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = tiny(PM.pointmlp_lite_config(8))
+    params = PM.pointmlp_init(KEY, cfg)
+    pts, _ = pointclouds.make_batch(jax.random.PRNGKey(1), cfg.n_points, 4)
+    return cfg, params, pts
+
+
+def legacy_freeze(params, cfg, quantize: bool):
+    """The pre-spec freeze sequence: fuse, then optional int8 export."""
+    fused, icfg = fusion.fuse_pointmlp(params, cfg)
+    if quantize:
+        qcfg = dataclasses.replace(
+            cfg.quant if cfg.quant.enabled else quant.QuantConfig(),
+            w_bits=min(cfg.quant.w_bits, 8), backend="int8_ref")
+        return quant.quantize_tree(fused, qcfg), icfg.replace(quant=qcfg)
+    return fused, icfg.replace(quant=QuantConfig(w_bits=32, a_bits=32))
+
+
+class TestGoldenEquivalence:
+    """build(spec).infer is bit-identical to the legacy manual sequence
+    (same seed, same LFSR trajectory) for every deployment variant."""
+
+    def check(self, cfg, params, pts, spec, *, quantize, use_pallas):
+        pipe = build(spec, params, jit=False)
+        frozen, icfg = legacy_freeze(params, cfg, quantize)
+        got, gst = pipe.infer(pts, sampling.seed_streams(7, 64))
+        want, wst = PM.pointmlp_infer(
+            frozen, icfg, pts, sampling.seed_streams(7, 64),
+            use_pallas=use_pallas, shared_urs=spec.shared_urs,
+            per_sample_norm=spec.per_sample_norm)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        np.testing.assert_array_equal(np.asarray(gst), np.asarray(wst))
+
+    def test_fp32_ref(self, setup):
+        cfg, params, pts = setup
+        spec = PipelineSpec.from_model_config(
+            cfg, precision="fp32", backend="ref").serving()
+        self.check(cfg, params, pts, spec, quantize=False, use_pallas=False)
+
+    def test_fp32_pallas_interpret(self, setup):
+        cfg, params, pts = setup
+        spec = PipelineSpec.from_model_config(
+            cfg, precision="fp32", backend="pallas_interpret").serving()
+        self.check(cfg, params, pts, spec, quantize=False, use_pallas=True)
+
+    def test_int8(self, setup):
+        cfg, params, pts = setup
+        spec = PipelineSpec.from_model_config(cfg, backend="ref").serving()
+        assert spec.precision == "int8"      # lifted from the 8/8 QAT cfg
+        self.check(cfg, params, pts, spec, quantize=True, use_pallas=False)
+
+    def test_fps_elite_fp32(self, setup):
+        cfg, params, pts = setup
+        fps_cfg = cfg.replace(sampler="fps", affine_mode="norm")
+        spec = PipelineSpec.from_model_config(
+            fps_cfg, precision="fp32", backend="ref")
+        pipe = build(spec, params, jit=False)
+        frozen, icfg = legacy_freeze(params, fps_cfg, quantize=False)
+        got, _ = pipe.infer(pts)
+        want, _ = PM.pointmlp_infer(frozen, icfg, pts)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestFrozenPipeline:
+    def test_jitted_infer_matches_eager(self, setup):
+        cfg, params, pts = setup
+        spec = PipelineSpec.from_model_config(
+            cfg, precision="fp32", backend="ref").serving()
+        eager = build(spec, params, jit=False)
+        jitted = build(spec, params)
+        a, _ = eager.infer(pts, sampling.seed_streams(3, 64))
+        b, _ = jitted.infer(pts, sampling.seed_streams(3, 64))
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-5, rtol=1e-5)
+
+    def test_flops_and_describe(self, setup):
+        cfg, params, _ = setup
+        pipe = build(PipelineSpec.from_model_config(cfg), params)
+        assert pipe.flops() == PM.pointmlp_flops(pipe.model_config)
+        text = pipe.describe()
+        for needle in ("urs", "knn", "int8", "BN folded", "flops"):
+            assert needle in text, f"describe() missing {needle!r}"
+
+    def test_unknown_backend_raises_at_build(self, setup):
+        cfg, params, _ = setup
+        spec = PipelineSpec.from_model_config(cfg, backend="tpu-v9")
+        with pytest.raises(KeyError, match="pallas_interpret"):
+            build(spec, params)
+
+    def test_build_is_a_function_regardless_of_import_order(self):
+        """`from repro.api import build` must yield the function even
+        when the ``repro.api.build`` submodule was imported first (the
+        submodule import binds the package attribute to the module;
+        the package pins the function eagerly)."""
+        import os
+        import pathlib
+        import subprocess
+        import sys
+
+        import repro
+        src = str(pathlib.Path(list(repro.__path__)[0]).resolve().parent)
+        env = dict(os.environ)
+        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+        code = ("import repro.serve.pointcloud\n"
+                "from repro.api import build\n"
+                "assert callable(build), type(build)\n"
+                "assert not hasattr(build, '__path__')\n")
+        subprocess.run([sys.executable, "-c", code], check=True, env=env)
+
+    def test_spec_validation(self):
+        with pytest.raises(ValueError, match="precision"):
+            PipelineSpec(precision="fp64")
+        with pytest.raises(ValueError, match="affine_mode"):
+            PipelineSpec(affine_mode="bn")
+
+
+class TestRegistry:
+    def test_unknown_key_lists_registered_names(self):
+        with pytest.raises(KeyError) as ei:
+            SAMPLERS.get("voxel")
+        msg = str(ei.value)
+        assert "fps" in msg and "urs" in msg and "sampler" in msg
+
+    def test_reregistration_raises(self):
+        @register_sampler("_test_dup")
+        def s(xyz, n, state, shared):             # pragma: no cover
+            return None, state
+        try:
+            with pytest.raises(ValueError, match="already registered"):
+                register_sampler("_test_dup")(s)
+        finally:
+            SAMPLERS.unregister("_test_dup")
+        assert "_test_dup" not in SAMPLERS
+
+    def test_builtin_entries_present(self):
+        assert set(SAMPLERS.names()) >= {"fps", "urs"}
+        assert "knn" in GROUPERS
+        assert set(BACKENDS.names()) >= {"ref", "pallas_interpret",
+                                         "pallas"}
+
+    def test_plugin_sampler_flows_through_build(self, setup):
+        """A registered plugin is reachable from a spec with no model
+        changes — the point of the registry design."""
+        cfg, params, pts = setup
+
+        @register_sampler("_test_first_n")
+        def first_n(xyz, n_samples, state, shared):
+            b = xyz.shape[0]
+            idx = jnp.broadcast_to(jnp.arange(n_samples, dtype=jnp.int32),
+                                   (b, n_samples))
+            return idx, state
+        try:
+            spec = PipelineSpec.from_model_config(
+                cfg, precision="fp32", sampler="_test_first_n")
+            logits, _ = build(spec, params).infer(pts)
+            assert logits.shape == (pts.shape[0], cfg.n_classes)
+            assert bool(jnp.all(jnp.isfinite(logits)))
+        finally:
+            SAMPLERS.unregister("_test_first_n")
+
+
+class TestPaperVariantSpecs:
+    def test_elite_m2_lite(self):
+        e, m, li = elite_spec(), m2_spec(), lite_spec()
+        assert (e.sampler, e.affine_mode, e.precision,
+                e.n_points) == ("fps", "affine", "fp32", 1024)
+        assert (m.sampler, m.affine_mode, m.precision,
+                m.n_points) == ("urs", "norm", "fp32", 512)
+        assert (li.precision, li.w_bits, li.a_bits,
+                li.n_points) == ("int8", 8, 8, 512)
+
+    def test_ladder_matches_core_compress(self):
+        from repro.core.compress import compression_ladder
+        specs = compression_ladder_specs(8)
+        cfgs = compression_ladder(8)
+        assert [s.name for s in specs] == [c.name for c in cfgs]
+        for s, c in zip(specs, cfgs):
+            assert (s.n_points, s.sampler, s.affine_mode) == \
+                (c.n_points, c.sampler, c.affine_mode)
+            assert s.to_model_config().quant.enabled == c.quant.enabled
+
+    def test_config_roundtrip(self):
+        cfg = PM.pointmlp_lite_config(40)
+        assert PipelineSpec.from_model_config(cfg).to_model_config() == cfg
+
+    def test_config_roundtrip_preserves_quant_policy(self):
+        """Bits and scale policy survive the lift — including >8-bit
+        QAT configs from the Fig. 4 precision sweep (the int8 *export*
+        clamps at deploy time, the spec does not)."""
+        cfg = PM.pointmlp_m2_config(40).replace(
+            quant=QuantConfig(w_bits=16, a_bits=16, per_channel=False,
+                              symmetric=False))
+        spec = PipelineSpec.from_model_config(cfg)
+        assert (spec.w_bits, spec.a_bits) == (16, 16)
+        assert (spec.per_channel, spec.symmetric) == (False, False)
+        assert spec.to_model_config() == cfg
+
+    def test_variant_helpers_accept_field_overrides(self):
+        """The **overrides surface must not collide with the fields a
+        helper itself sets."""
+        assert lite_spec(8, precision="fp32").precision == "fp32"
+        assert m2_spec(8, sampler="fps").sampler == "fps"
+        assert elite_spec(8, name="custom").name == "custom"
+
+
+class TestLegacyCompat:
+    def test_legacy_engine_kwargs_warn_and_match_spec_engine(self, setup):
+        cfg, params, pts = setup
+        with pytest.warns(DeprecationWarning, match="repro legacy API"):
+            legacy = PointCloudEngine(params, cfg, max_batch=4,
+                                      quantize=True, backend="pallas",
+                                      seed=5)
+        spec = PipelineSpec.from_model_config(
+            cfg, precision="int8", backend="ref").serving()
+        modern = PointCloudEngine(params, spec, max_batch=4, seed=5)
+        np.testing.assert_array_equal(
+            np.asarray(legacy.classify(pts)),
+            np.asarray(modern.classify(pts)))
+
+    def test_legacy_fp32_pallas_default_backend(self, setup):
+        """Bare legacy construction (old default backend="pallas") maps
+        to the interpret-mode fused kernel."""
+        cfg, params, pts = setup
+        with pytest.warns(DeprecationWarning, match="repro legacy API"):
+            legacy = PointCloudEngine(params, cfg, max_batch=4, seed=1)
+        assert legacy.spec.backend == "pallas_interpret"
+        assert legacy.spec.precision == "fp32"
+        spec = PipelineSpec.from_model_config(
+            cfg, precision="fp32", backend="pallas_interpret").serving()
+        modern = PointCloudEngine(params, spec, max_batch=4, seed=1)
+        np.testing.assert_array_equal(
+            np.asarray(legacy.classify(pts[:2])),
+            np.asarray(modern.classify(pts[:2])))
+
+    def test_spec_plus_legacy_kwargs_is_an_error(self, setup):
+        cfg, params, _ = setup
+        spec = PipelineSpec.from_model_config(cfg)
+        with pytest.raises(TypeError, match="legacy kwargs"):
+            PointCloudEngine(params, spec, quantize=True)
+
+    def test_legacy_int8_preserves_scale_policy(self, setup):
+        """quantize=True on a per-tensor/asymmetric QAT config serves
+        the same arithmetic as the pre-spec engine (which reused
+        cfg.quant's per_channel/symmetric for the export)."""
+        cfg, params, pts = setup
+        pt_cfg = cfg.replace(quant=dataclasses.replace(
+            cfg.quant, per_channel=False))
+        with pytest.warns(DeprecationWarning, match="repro legacy API"):
+            legacy = PointCloudEngine(params, pt_cfg, max_batch=4,
+                                      quantize=True, seed=5)
+        assert legacy.spec.per_channel is False
+        frozen, icfg = legacy_freeze(params, pt_cfg, quantize=True)
+        want, _ = PM.pointmlp_infer(frozen, icfg, pts,
+                                    sampling.seed_streams(5, 64),
+                                    shared_urs=True, per_sample_norm=True)
+        np.testing.assert_array_equal(np.asarray(legacy.classify(pts)),
+                                      np.asarray(want))
+
+    def test_deprecation_warning_is_error_for_in_tree_callers(self, setup):
+        """The pytest config escalates the legacy-API warning prefix to
+        an error, so nothing in-tree can silently use the old kwargs."""
+        cfg, params, _ = setup
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            with pytest.raises(DeprecationWarning):
+                PointCloudEngine(params, cfg, max_batch=2)

@@ -2,12 +2,15 @@
 
 Fused-vs-unfused agreement, pad-to-batch semantics, deterministic LFSR
 advance across calls, and queue-order invariance within a batch.
+Engines are constructed from :class:`~repro.api.spec.PipelineSpec` —
+the legacy-kwarg surface is covered by ``tests/test_pipeline_api.py``.
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.api import PipelineSpec
 from repro.core import sampling
 from repro.core.quant import QuantConfig
 from repro.data import pointclouds
@@ -20,6 +23,13 @@ KEY = jax.random.PRNGKey(0)
 def tiny(cfg: PM.PointMLPConfig) -> PM.PointMLPConfig:
     return cfg.replace(n_points=128, embed_dim=16, n_classes=8,
                        k_neighbors=8)
+
+
+def serve_spec(cfg: PM.PointMLPConfig, **overrides) -> PipelineSpec:
+    """The fused-fp32 ``ref`` serving spec for a training config."""
+    over = dict(precision="fp32", backend="ref")
+    over.update(overrides)
+    return PipelineSpec.from_model_config(cfg, **over).serving()
 
 
 @pytest.fixture(scope="module")
@@ -35,7 +45,7 @@ class TestFusedAgreement:
         """classify == the unfused training-path forward (inference BN,
         fp32, same shared-URS indices) within 1e-3 max-abs."""
         cfg, params, pts = lite_setup
-        eng = PointCloudEngine(params, cfg, max_batch=4, backend="ref",
+        eng = PointCloudEngine(params, serve_spec(cfg), max_batch=4,
                                seed=7)
         got = eng.classify(pts[:4])
         ref_cfg = cfg.replace(quant=QuantConfig(w_bits=32, a_bits=32))
@@ -50,7 +60,7 @@ class TestFusedAgreement:
         per-cloud sigma; shared URS == per-slot stream 0)."""
         cfg, params, pts = lite_setup
         ref_cfg = cfg.replace(quant=QuantConfig(w_bits=32, a_bits=32))
-        eng = PointCloudEngine(params, cfg, max_batch=4, backend="ref",
+        eng = PointCloudEngine(params, serve_spec(cfg), max_batch=4,
                                seed=13)
         got = eng.classify(pts[:1])
         want, _, _ = PM.pointmlp_apply(params, ref_cfg, pts[:1],
@@ -63,7 +73,7 @@ class TestFusedAgreement:
         cfg, params, pts = lite_setup
         fps_cfg = cfg.replace(sampler="fps",
                               quant=QuantConfig(w_bits=32, a_bits=32))
-        eng = PointCloudEngine(params, fps_cfg, max_batch=2, backend="ref")
+        eng = PointCloudEngine(params, serve_spec(fps_cfg), max_batch=2)
         got = eng.classify(pts[:1])
         want, _, _ = PM.pointmlp_apply(params, fps_cfg, pts[:1])
         assert float(jnp.max(jnp.abs(got - want))) < 1e-3
@@ -72,19 +82,20 @@ class TestFusedAgreement:
         """Fused-Pallas routing (interpret mode on CPU) reproduces the
         plain jnp path."""
         cfg, params, pts = lite_setup
-        ref = PointCloudEngine(params, cfg, max_batch=2, backend="ref",
+        ref = PointCloudEngine(params, serve_spec(cfg), max_batch=2,
                                seed=3).classify(pts[:2])
-        got = PointCloudEngine(params, cfg, max_batch=2, backend="pallas",
-                               seed=3).classify(pts[:2])
+        got = PointCloudEngine(params,
+                               serve_spec(cfg, backend="pallas_interpret"),
+                               max_batch=2, seed=3).classify(pts[:2])
         np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
                                    atol=1e-4, rtol=1e-4)
 
     def test_int8_deploy_close_to_fp32(self, lite_setup):
         cfg, params, pts = lite_setup
-        fp = PointCloudEngine(params, cfg, max_batch=4, backend="ref",
+        fp = PointCloudEngine(params, serve_spec(cfg), max_batch=4,
                               seed=5).classify(pts[:4])
-        q8 = PointCloudEngine(params, cfg, max_batch=4, quantize=True,
-                              seed=5).classify(pts[:4])
+        q8 = PointCloudEngine(params, serve_spec(cfg, precision="int8"),
+                              max_batch=4, seed=5).classify(pts[:4])
         assert bool(jnp.all(jnp.isfinite(q8)))
         agree = float(jnp.mean(jnp.argmax(q8, -1) == jnp.argmax(fp, -1)))
         assert agree >= 0.5
@@ -93,7 +104,7 @@ class TestFusedAgreement:
 class TestPadToBatch:
     def test_ragged_queue_returns_only_real_requests(self, lite_setup):
         cfg, params, pts = lite_setup
-        eng = PointCloudEngine(params, cfg, max_batch=4, backend="ref")
+        eng = PointCloudEngine(params, serve_spec(cfg), max_batch=4)
         out = eng.classify(pts[:3])                  # 3 real + 1 pad lane
         assert out.shape == (3, cfg.n_classes)
         assert eng.stats.requests == 3 and eng.stats.padded == 1
@@ -102,16 +113,16 @@ class TestPadToBatch:
         """A 3-request queue gives the same logits as the same 3 clouds
         followed by a 4th — padding is invisible to real lanes."""
         cfg, params, pts = lite_setup
-        a = PointCloudEngine(params, cfg, max_batch=4, backend="ref",
+        a = PointCloudEngine(params, serve_spec(cfg), max_batch=4,
                              seed=2).classify(pts[:3])
-        b = PointCloudEngine(params, cfg, max_batch=4, backend="ref",
+        b = PointCloudEngine(params, serve_spec(cfg), max_batch=4,
                              seed=2).classify(pts[:4])
         np.testing.assert_allclose(np.asarray(a), np.asarray(b[:3]),
                                    atol=1e-6)
 
     def test_empty_queue_returns_empty(self, lite_setup):
         cfg, params, _ = lite_setup
-        eng = PointCloudEngine(params, cfg, max_batch=4, backend="ref")
+        eng = PointCloudEngine(params, serve_spec(cfg), max_batch=4)
         assert eng.classify([]).shape == (0, cfg.n_classes)
         assert eng.classify(jnp.zeros((0, cfg.n_points, 3))).shape == \
             (0, cfg.n_classes)
@@ -119,7 +130,7 @@ class TestPadToBatch:
 
     def test_queue_longer_than_batch_is_chunked(self, lite_setup):
         cfg, params, pts = lite_setup
-        eng = PointCloudEngine(params, cfg, max_batch=4, backend="ref")
+        eng = PointCloudEngine(params, serve_spec(cfg), max_batch=4)
         out = eng.classify(pts)                      # 6 requests, batch 4
         assert out.shape == (6, cfg.n_classes)
         assert eng.stats.batches == 2 and eng.stats.padded == 2
@@ -131,7 +142,7 @@ class TestLFSRState:
         LFSR words from every stream, so the engine state after k calls
         equals a pure lfsr_sequence advance — restart-stable."""
         cfg, params, pts = lite_setup
-        eng = PointCloudEngine(params, cfg, max_batch=4, backend="ref",
+        eng = PointCloudEngine(params, serve_spec(cfg), max_batch=4,
                                seed=11)
         eng.classify(pts[:4])
         eng.classify(pts[:2])                        # 2 dispatches total
@@ -143,23 +154,48 @@ class TestLFSRState:
 
     def test_same_seed_same_results(self, lite_setup):
         cfg, params, pts = lite_setup
-        a = PointCloudEngine(params, cfg, max_batch=4, backend="ref",
+        a = PointCloudEngine(params, serve_spec(cfg), max_batch=4,
                              seed=4).classify(pts[:4])
-        b = PointCloudEngine(params, cfg, max_batch=4, backend="ref",
+        b = PointCloudEngine(params, serve_spec(cfg), max_batch=4,
                              seed=4).classify(pts[:4])
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
     def test_warmup_compiles_without_consuming_state(self, lite_setup):
         cfg, params, pts = lite_setup
-        eng = PointCloudEngine(params, cfg, max_batch=4, backend="ref",
+        eng = PointCloudEngine(params, serve_spec(cfg), max_batch=4,
                                seed=6)
         s0 = np.asarray(eng.lfsr_state)
         assert eng.warmup() > 0.0
         np.testing.assert_array_equal(np.asarray(eng.lfsr_state), s0)
-        ref = PointCloudEngine(params, cfg, max_batch=4, backend="ref",
+        ref = PointCloudEngine(params, serve_spec(cfg), max_batch=4,
                                seed=6).classify(pts[:4])
         np.testing.assert_array_equal(np.asarray(eng.classify(pts[:4])),
                                       np.asarray(ref))
+
+
+class TestStats:
+    def test_reset_zeroes_all_counters(self, lite_setup):
+        cfg, params, pts = lite_setup
+        eng = PointCloudEngine(params, serve_spec(cfg), max_batch=4)
+        eng.warmup()
+        eng.classify(pts[:3])
+        s = eng.stats
+        assert s.requests and s.batches and s.serve_s > 0
+        s.reset()
+        assert s.requests == 0 and s.batches == 0 and s.padded == 0
+        assert s.compile_s == 0.0 and s.serve_s == 0.0 and s.host_s == 0.0
+
+    def test_serve_s_excludes_host_side_prep(self, lite_setup):
+        """Padding/conversion time lands in host_s, not serve_s — the
+        SPS metric reflects device dispatch throughput."""
+        cfg, params, pts = lite_setup
+        eng = PointCloudEngine(params, serve_spec(cfg), max_batch=4)
+        eng.warmup()
+        eng.classify([np.asarray(p) for p in pts[:3]])  # host-heavy input
+        assert eng.stats.serve_s > 0.0
+        assert eng.stats.host_s > 0.0
+        assert eng.stats.samples_per_s == \
+            eng.stats.requests / eng.stats.serve_s
 
 
 class TestQueueOrderInvariance:
@@ -168,9 +204,9 @@ class TestQueueOrderInvariance:
         logits are independent of its slot in the queue."""
         cfg, params, pts = lite_setup
         perm = jnp.array([3, 1, 0, 2])
-        a = PointCloudEngine(params, cfg, max_batch=4, backend="ref",
+        a = PointCloudEngine(params, serve_spec(cfg), max_batch=4,
                              seed=9).classify(pts[:4])
-        b = PointCloudEngine(params, cfg, max_batch=4, backend="ref",
+        b = PointCloudEngine(params, serve_spec(cfg), max_batch=4,
                              seed=9).classify(pts[perm])
         np.testing.assert_allclose(np.asarray(a[perm]), np.asarray(b),
                                    atol=1e-6)
