@@ -113,6 +113,46 @@ def bench_specs() -> None:
               derived.replace(",", ";"))
 
 
+def bench_spec_async() -> None:
+    """One row per registered batching policy (async engine smoke).
+
+    Drives ``AsyncPointCloudEngine`` over the same tiny spec as
+    ``bench_specs`` through a burst of single-cloud submissions, pumped
+    sans-IO (no event loop, no sleeps), so the CI ``--quick`` smoke
+    exercises the submit/pump/flush scheduler and every ``POLICIES``
+    entry end-to-end.
+    """
+    import jax
+
+    from repro.api import lite_spec
+    from repro.api.build import build
+    from repro.data import pointclouds
+    from repro.models import pointmlp as PM
+    from repro.serve.async_engine import AsyncPointCloudEngine
+    from repro.serve.policy import POLICIES
+
+    base = lite_spec(pointclouds.N_CLASSES).replace(
+        n_points=128, embed_dim=16, k_neighbors=8,
+        precision="fp32").serving(slo_ms=5.0)
+    params = PM.pointmlp_init(jax.random.PRNGKey(0), base.to_model_config())
+    pipeline = build(base, params)
+    pts, _ = pointclouds.make_batch(jax.random.PRNGKey(1), base.n_points, 10)
+    for name in POLICIES.names():
+        eng = AsyncPointCloudEngine(pipeline, max_batch=4, policy=name,
+                                    seed=0)
+        eng.warmup()
+        t0 = time.time()
+        futures = [eng.submit(p) for p in pts]
+        while eng.pump():
+            pass
+        eng.flush()
+        assert all(f.done() for f in futures), f"policy {name} lost requests"
+        s = eng.stats
+        _emit(f"spec_async_{name}", (time.time() - t0) * 1e6,
+              f"policy={name};requests={s.requests};batches={s.batches};"
+              f"padded={s.padded};SPS={s.samples_per_s:.1f}")
+
+
 def bench_serve_pointcloud(quick: bool) -> None:
     from benchmarks import serve_pointcloud
     for name, us, derived in serve_pointcloud.rows(
@@ -151,6 +191,7 @@ def main() -> None:
     bench_table2()
     bench_table3()
     bench_specs()
+    bench_spec_async()
     bench_serve_pointcloud(args.quick)
     if not args.quick:
         bench_table1(args.table1_steps)

@@ -77,6 +77,10 @@ class PipelineSpec:
     # ---- batch semantics ----
     shared_urs: bool = False
     per_sample_norm: bool = False
+    # ---- serving policy (async engine; registry keys in
+    # ``repro.serve.policy.POLICIES``) ----
+    policy: str = "fixed"
+    slo_ms: float = 0.0
 
     def __post_init__(self):
         if self.precision not in PRECISIONS:
@@ -85,20 +89,41 @@ class PipelineSpec:
         if self.affine_mode not in AFFINE_MODES:
             raise ValueError(f"affine_mode must be one of {AFFINE_MODES}, "
                              f"got {self.affine_mode!r}")
+        if self.slo_ms < 0:
+            raise ValueError(f"slo_ms must be >= 0, got {self.slo_ms!r}")
 
     def replace(self, **kw) -> "PipelineSpec":
         return dataclasses.replace(self, **kw)
 
-    def serving(self) -> "PipelineSpec":
+    def serving(self, policy: str | None = None,
+                slo_ms: float | None = None) -> "PipelineSpec":
         """The streaming-deployment rendering of this spec: one sampler
         services the batch, per-cloud normalization statistics — the
-        serving engine's queue-order-invariance contract."""
-        return self.replace(shared_urs=True, per_sample_norm=True)
+        serving engines' queue-order/dispatch-invariance contract.
+
+        Args:
+          policy: async batching policy registry key (``fixed`` |
+            ``deadline`` | any registered plugin); None keeps the
+            current field.
+          slo_ms: per-request latency objective handed to the policy
+            (the ``deadline`` policy's queue-wait budget); None keeps
+            the current field.
+        """
+        kw = dict(shared_urs=True, per_sample_norm=True)
+        if policy is not None:
+            kw["policy"] = policy
+        if slo_ms is not None:
+            kw["slo_ms"] = slo_ms
+        return self.replace(**kw)
 
     def validate(self) -> "PipelineSpec":
         """Resolve every registry key (raises ``KeyError`` listing the
         registered names on a typo); returns self for chaining."""
         registry.resolve(self.sampler, self.grouper, self.backend)
+        # Deferred import: the policy registry lives serve-side, above
+        # this package in the import graph.
+        from repro.serve.policy import POLICIES
+        POLICIES.get(self.policy)
         return self
 
     # ------------------------------------------- model-config bridge ----

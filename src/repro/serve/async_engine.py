@@ -1,0 +1,394 @@
+"""Async point-cloud serving: futures, SLO-aware batching, double buffering.
+
+:class:`~repro.serve.pointcloud.PointCloudEngine` drains a queue the
+caller has already assembled; real traffic arrives ragged and bursty,
+one cloud at a time, and a synchronous engine leaves the device idle
+while the host pads and converts the next batch.
+:class:`AsyncPointCloudEngine` closes both gaps over *any*
+:class:`~repro.api.build.FrozenPipeline` (every registered backend —
+``ref`` | ``pallas_interpret`` | ``pallas``, fp32 or int8 — gets async
+serving for free):
+
+* **Request queue + futures** — ``submit(cloud)`` enqueues one request
+  and returns a :class:`ServeFuture` resolved when its dispatch
+  completes; requests are served FIFO.
+* **Pluggable batching policy** — a
+  :class:`~repro.serve.policy.BatchPolicy` (``fixed`` | ``deadline``
+  from the ``POLICIES`` registry, named by ``PipelineSpec.policy`` /
+  ``slo_ms``) decides on every ``pump()`` whether the queue is worth a
+  fixed-shape dispatch now.
+* **Double-buffered dispatch** — ``pipeline.infer`` is an asynchronous
+  dispatch in JAX, so the engine enqueues batch N+1 (host-side
+  stack/pad + device transfer) *before* blocking on batch N: host prep
+  of the next batch overlaps device compute of the current one, the
+  software rendering of the stall-free deep pipelining that PointAcc /
+  Neu et al. get from hardware FIFOs.  At most one dispatch is in
+  flight; its futures resolve when the next dispatch is enqueued, on an
+  idle ``pump()``, or at ``flush()``.
+
+LFSR contract (and why it differs from the sync engine)
+-------------------------------------------------------
+Every dispatch starts from the engine's *seed* LFSR state instead of
+threading the advanced state across dispatches.  Combined with
+``spec.serving()`` semantics (shared URS sampler + per-sample norm)
+and the single fixed dispatch shape, a request's logits are
+bit-identical regardless of which dispatch batch it lands in, which
+co-batched requests surround it, and what the policy decided —
+batching is purely a performance decision, invisible to results.
+This is the paper's "initialize the LFSRs with the same starting
+states" deployment contract, and it is what lets ``tests/serving``
+assert golden equivalence against solo sync runs.  (The sync engine
+instead advances one persistent state across calls — its results
+deliberately depend on the dispatch index; see its LFSR tests.)
+
+Driving the engine
+------------------
+Sans-IO and deterministic — the scheduler only acts inside ``pump()``,
+and all timing flows through an injectable ``clock``::
+
+    eng = AsyncPointCloudEngine(pipeline, max_batch=8,
+                                policy="deadline", clock=virtual_clock)
+    fut = eng.submit(cloud)
+    eng.pump()        # policy check; maybe dispatch; retire finished work
+    eng.flush()       # drain everything; all futures resolve
+    fut.result()
+
+(see ``tests/serving/harness.py`` for the virtual-clock trace driver),
+or under asyncio for real traffic::
+
+    server = asyncio.create_task(eng.serve_loop())
+    logits = await eng.classify_async(cloud)
+    eng.close(); await server
+"""
+from __future__ import annotations
+
+import asyncio
+import collections
+import dataclasses
+import time
+import warnings
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.build import FrozenPipeline, build
+from repro.core import sampling
+from repro.serve import batching
+from repro.serve.batching import PointCloudStats
+from repro.serve.policy import BatchPolicy, make_policy
+
+__all__ = ["AsyncPointCloudEngine", "ServeFuture"]
+
+
+def _is_ready(arr) -> bool:
+    """True when the device has finished computing ``arr`` (conservative
+    True when the runtime lacks a readiness probe: callers then block,
+    the pre-probe behavior)."""
+    probe = getattr(arr, "is_ready", None)
+    return bool(probe()) if callable(probe) else True
+
+
+class ServeFuture:
+    """Completion handle for one submitted cloud.
+
+    Resolved by the engine (never by callers) with the request's
+    ``[n_classes]`` logits row.  ``t_submit`` / ``t_done`` are stamped
+    from the engine's clock — wall time in production, virtual time
+    under the test harness — so ``latency_ms`` is exact either way.
+    """
+
+    __slots__ = ("request_id", "t_submit", "t_done", "_value", "_done",
+                 "_callbacks")
+
+    def __init__(self, request_id: int, t_submit: float):
+        self.request_id = request_id
+        self.t_submit = t_submit
+        self.t_done: Optional[float] = None
+        self._value = None
+        self._done = False
+        self._callbacks: List[Callable] = []
+
+    def done(self) -> bool:
+        return self._done
+
+    def result(self) -> jnp.ndarray:
+        """The logits row; raises while pending (pump/flush the engine)."""
+        if not self._done:
+            raise RuntimeError(
+                f"request {self.request_id} is still pending — drive the "
+                f"engine (pump()/flush()/serve_loop) before result()")
+        return self._value
+
+    def add_done_callback(self, fn: Callable[["ServeFuture"], None]) -> None:
+        """Call ``fn(self)`` on resolution (immediately if already done).
+
+        Callback exceptions are contained (reported as a
+        ``RuntimeWarning``), matching asyncio's convention — one
+        client's bad callback must not strand its co-batched requests.
+        """
+        if self._done:
+            self._run_callback(fn)
+        else:
+            self._callbacks.append(fn)
+
+    def _run_callback(self, fn: Callable) -> None:
+        try:
+            fn(self)
+        except Exception as e:  # noqa: BLE001 — containment is the point
+            warnings.warn(
+                f"ServeFuture done-callback for request {self.request_id} "
+                f"raised {type(e).__name__}: {e}", RuntimeWarning,
+                stacklevel=2)
+
+    @property
+    def latency_ms(self) -> Optional[float]:
+        """Submit-to-resolve latency on the engine clock (None if pending)."""
+        if self.t_done is None:
+            return None
+        return (self.t_done - self.t_submit) * 1e3
+
+    def _resolve(self, value: jnp.ndarray, t_done: float) -> None:
+        assert not self._done, "a request resolves exactly once"
+        self._value = value
+        self.t_done = t_done
+        self._done = True
+        callbacks, self._callbacks = self._callbacks, []
+        for fn in callbacks:
+            self._run_callback(fn)
+
+
+@dataclasses.dataclass
+class _Inflight:
+    """One dispatched batch whose device compute may still be running."""
+    futures: List[ServeFuture]
+    logits: jnp.ndarray          # [max_batch, n_classes], device-async
+
+
+class AsyncPointCloudEngine:
+    """SLO-aware async serving over a frozen pipeline.
+
+    Args:
+      pipeline: any :class:`~repro.api.build.FrozenPipeline` (build one
+        with ``repro.api.build.build(spec.serving(...), params)``), or
+        use :meth:`from_params` for the sync-engine-style convenience
+        surface.
+      max_batch: the one fixed dispatch shape; partial dispatches are
+        zero-padded to it (shared core in ``repro.serve.batching``).
+      policy: a :class:`~repro.serve.policy.BatchPolicy` instance, a
+        ``POLICIES`` registry key, or None to use the pipeline spec's
+        ``policy`` / ``slo_ms`` fields.
+      seed: LFSR seed; every dispatch restarts from this state (see the
+        module docstring for the dispatch-invariance contract).
+      clock: monotonic seconds source for request timing and policy
+        wait computation — injectable so tests run on a virtual clock.
+    """
+
+    def __init__(self, pipeline: FrozenPipeline, max_batch: int = 8,
+                 policy=None, seed: int = 0,
+                 clock: Callable[[], float] = time.monotonic):
+        if not isinstance(pipeline, FrozenPipeline):
+            raise TypeError(
+                "AsyncPointCloudEngine wraps a FrozenPipeline; build one "
+                "with repro.api.build.build(spec, params) or use "
+                "AsyncPointCloudEngine.from_params(params, spec, ...)")
+        self.pipeline = pipeline
+        self.spec = pipeline.spec
+        if not (self.spec.shared_urs and self.spec.per_sample_norm):
+            # The whole async contract — bit-identical results
+            # regardless of batching, pad lanes that cannot leak —
+            # rests on the streaming-batch semantics.
+            raise ValueError(
+                "AsyncPointCloudEngine needs a serving spec (shared_urs "
+                "+ per_sample_norm); build the pipeline from "
+                "spec.serving()")
+        self.cfg = pipeline.model_config
+        self.max_batch = int(max_batch)
+        if policy is None:
+            policy = self.spec.policy
+        self.policy: BatchPolicy = make_policy(policy, slo_ms=self.spec.slo_ms)
+        self.stats = PointCloudStats()
+        # Per-request latency log, resolve order; bounded so an
+        # always-on server never grows it past the recent window.
+        # ``reset_stats()`` clears it together with ``stats``.
+        self.latencies_ms: collections.deque = collections.deque(
+            maxlen=10_000)
+        self._clock = clock
+        self._lfsr0 = sampling.seed_streams(seed, max(self.max_batch, 64))
+        self._queue: collections.deque = collections.deque()
+        self._inflight: Optional[_Inflight] = None
+        self._seq = 0
+        self._closed = False
+
+    @classmethod
+    def from_params(cls, params, spec, **kwargs) -> "AsyncPointCloudEngine":
+        """Build the pipeline and the engine in one call (the sync
+        engine's ``(params, spec)`` surface)."""
+        spec.validate()
+        return cls(build(spec, params), **kwargs)
+
+    # ------------------------------------------------------ sans-IO ----
+
+    def submit(self, points) -> ServeFuture:
+        """Enqueue one [N, 3] cloud; returns its future (FIFO service)."""
+        if self._closed:
+            raise RuntimeError("engine is closed")
+        cloud = np.asarray(points, np.float32)
+        if cloud.shape != (self.cfg.n_points, 3):
+            raise ValueError(
+                f"submit() takes one [N={self.cfg.n_points}, 3] cloud; "
+                f"got shape {cloud.shape}")
+        fut = ServeFuture(self._seq, self._clock())
+        self._seq += 1
+        self._queue.append((cloud, fut))
+        return fut
+
+    def pump(self, block: bool = True) -> int:
+        """One scheduler turn; returns how many requests were dispatched.
+
+        Asks the policy whether the queue is worth a dispatch at the
+        current clock reading.  On a dispatch, the previous in-flight
+        batch is retired *after* the new one is enqueued (the double
+        buffer); on an idle turn, in-flight work is retired so futures
+        resolve promptly.
+
+        Args:
+          block: on an idle turn, wait for the in-flight batch to
+            finish (the sans-IO default — deterministic settling for
+            the virtual-clock harness).  ``block=False`` retires only
+            work the device has already finished, so a cooperative
+            scheduler (``serve_loop``) never stalls its event loop on
+            device compute.
+        """
+        depth = len(self._queue)
+        oldest_wait_ms = 0.0
+        if depth:
+            oldest_wait_ms = (self._clock()
+                              - self._queue[0][1].t_submit) * 1e3
+        n = self.policy.decide(depth=depth, oldest_wait_ms=oldest_wait_ms,
+                               max_batch=self.max_batch)
+        n = max(0, min(n, depth, self.max_batch))
+        if n == 0:
+            self._retire(wait=block)
+            return 0
+        self._dispatch(n)
+        return n
+
+    def flush(self) -> None:
+        """Drain the queue (policy bypassed) and resolve every future."""
+        while self._queue:
+            self._dispatch(min(len(self._queue), self.max_batch))
+        self._retire()
+
+    @property
+    def depth(self) -> int:
+        """Queued (not yet dispatched) request count."""
+        return len(self._queue)
+
+    @property
+    def pending(self) -> int:
+        """Requests not yet resolved: queued + in flight on device."""
+        inflight = len(self._inflight.futures) if self._inflight else 0
+        return len(self._queue) + inflight
+
+    def reset_stats(self) -> None:
+        """Open a fresh measurement window: zero ``stats`` *and* clear
+        the latency log, so window percentiles never mix eras."""
+        self.stats.reset()
+        self.latencies_ms.clear()
+
+    def warmup(self) -> float:
+        """Compile the one ``(max_batch, n_points)`` executable ahead of
+        traffic (no queue interaction, no LFSR consumption — dispatches
+        restart from the seed state anyway).  Returns compile seconds."""
+        dummy = jnp.zeros((self.max_batch, self.cfg.n_points, 3),
+                          jnp.float32)
+        t0 = time.time()
+        logits, _ = self.pipeline.infer(dummy, jnp.array(self._lfsr0))
+        jax.block_until_ready(logits)
+        dt = time.time() - t0
+        self.stats.compile_s += dt
+        return dt
+
+    def describe(self) -> str:
+        return (f"{self.pipeline.describe()}\n"
+                f"  max_batch : {self.max_batch}\n"
+                f"  policy    : {self.policy.describe()}")
+
+    # ------------------------------------------------ dispatch core ----
+
+    def _dispatch(self, n: int) -> None:
+        t_host = time.time()
+        taken = [self._queue.popleft() for _ in range(n)]
+        chunk = batching.stack_requests([c for c, _ in taken],
+                                        self.cfg.n_points)
+        batch, pad = batching.pad_to_batch(chunk, self.max_batch)
+        self.stats.host_s += time.time() - t_host
+
+        # Enqueue batch N+1 on the device, *then* retire batch N: the
+        # block on N overlaps with N+1's H2D transfer + compute, and the
+        # stack/pad above overlapped with N's compute.  The returned
+        # LFSR state is discarded — every dispatch restarts from the
+        # seed state (dispatch-invariance contract).
+        t0 = time.time()
+        logits, _ = self.pipeline.infer(batch, jnp.array(self._lfsr0))
+        self.stats.serve_s += time.time() - t0
+        nxt = _Inflight([f for _, f in taken], logits)
+        self._retire()
+        self._inflight = nxt
+        self.stats.batches += 1
+        self.stats.padded += pad
+        self.stats.requests += n
+
+    def _retire(self, wait: bool = True) -> None:
+        if self._inflight is None:
+            return
+        if not wait and not _is_ready(self._inflight.logits):
+            return                       # device still busy; try later
+        t0 = time.time()
+        logits = jax.block_until_ready(self._inflight.logits)
+        self.stats.serve_s += time.time() - t0
+        futures, self._inflight = self._inflight.futures, None
+        now = self._clock()
+        for i, fut in enumerate(futures):
+            fut._resolve(logits[i], now)
+            self.latencies_ms.append(fut.latency_ms)
+
+    # ------------------------------------------------ asyncio shell ----
+
+    async def classify_async(self, points) -> jnp.ndarray:
+        """Submit one cloud and await its logits.
+
+        Needs something pumping the engine concurrently — run
+        :meth:`serve_loop` as a background task.
+        """
+        loop = asyncio.get_running_loop()
+        afut = loop.create_future()
+
+        def on_done(fut: ServeFuture) -> None:
+            def settle() -> None:
+                if not afut.done():
+                    afut.set_result(fut.result())
+            loop.call_soon_threadsafe(settle)
+
+        self.submit(points).add_done_callback(on_done)
+        return await afut
+
+    async def serve_loop(self, tick_s: float = 0.001) -> None:
+        """Background dispatcher: pump every ``tick_s`` until
+        :meth:`close`, then flush.  The only place the engine sleeps —
+        the sans-IO core stays wall-clock free for deterministic tests.
+        Pumps with ``block=False`` so an idle tick never stalls the
+        event loop on device compute (submissions keep flowing while
+        the in-flight batch runs).
+        """
+        while not self._closed:
+            self.pump(block=False)
+            await asyncio.sleep(tick_s)
+        self.flush()
+
+    def close(self) -> None:
+        """Stop accepting requests; a running serve_loop flushes and
+        exits.  Call ``flush()`` directly when driving sans-IO."""
+        self._closed = True

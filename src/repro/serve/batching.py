@@ -1,0 +1,95 @@
+"""Shared pad/dispatch/unpad core of the point-cloud serving engines.
+
+Both engines — the synchronous queue-draining
+:class:`~repro.serve.pointcloud.PointCloudEngine` and the async
+double-buffered :class:`~repro.serve.async_engine.AsyncPointCloudEngine`
+— serve ragged traffic against one jitted fixed-shape executable.  The
+ragged->fixed plumbing lives here exactly once: queue normalization,
+``max_batch`` chunking, zero pad-to-batch, request stacking, and the
+stats schema both engines report.
+
+Pad lanes are computed but never returned, and under ``spec.serving()``
+semantics (shared URS sampler + per-sample normalization) they cannot
+leak: a real request's logits are bit-identical no matter what occupies
+the other slots of its dispatch — padding is invisible to results, so
+batching is purely a throughput decision.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class PointCloudStats:
+    """The serving-stats schema shared by the sync and async engines."""
+    requests: int = 0          # real samples served
+    batches: int = 0           # jitted fixed-shape dispatches
+    padded: int = 0            # dummy pad samples computed
+    compile_s: float = 0.0     # time spent in warmup compiles
+    serve_s: float = 0.0       # device time in the jitted dispatch loop
+    host_s: float = 0.0        # host-side padding / array conversion
+
+    @property
+    def samples_per_s(self) -> float:
+        """Device throughput: host-side queue prep (array conversion,
+        pad-to-batch) is tracked separately in ``host_s``."""
+        return self.requests / max(self.serve_s, 1e-9)
+
+    def reset(self) -> None:
+        """Zero every counter/timer (a fresh measurement window)."""
+        fresh = PointCloudStats()
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, getattr(fresh, f.name))
+
+
+def as_point_queue(points, n_points: int) -> jnp.ndarray:
+    """Normalize a ragged classify() input to a [R, N, 3] float32 queue.
+
+    Accepts a [R, N, 3] array, a single [N, 3] cloud, a list of clouds,
+    or an empty input (R == 0 passes through as an empty queue).
+    """
+    pts = jnp.asarray(points, jnp.float32)
+    if pts.size == 0:
+        return pts.reshape(0, n_points, 3)
+    if pts.ndim == 2:
+        pts = pts[None]
+    assert pts.shape[1] == n_points, \
+        f"engine is fixed-shape: got N={pts.shape[1]}, expected {n_points}"
+    return pts
+
+
+def split_queue(pts: jnp.ndarray, max_batch: int) -> Iterator[jnp.ndarray]:
+    """Split a [R, N, 3] queue into <= ``max_batch`` chunks, in order."""
+    for i in range(0, pts.shape[0], max_batch):
+        yield pts[i:i + max_batch]
+
+
+def pad_to_batch(chunk: jnp.ndarray, max_batch: int
+                 ) -> Tuple[jnp.ndarray, int]:
+    """Zero-pad a [r <= max_batch, N, 3] chunk to the one dispatch shape.
+
+    Returns ``(padded [max_batch, N, 3], n_pad)``.  The fixed shape is
+    load-bearing twice over: it keeps the engines on a single jitted
+    executable, and — because bit-identity of a lane's result is only
+    guaranteed within one executable — it is what makes results
+    independent of how the queue was partitioned into dispatches.
+    """
+    r, n = chunk.shape[0], chunk.shape[1]
+    pad = max_batch - r
+    assert pad >= 0, f"chunk of {r} exceeds max_batch={max_batch}"
+    if pad:
+        chunk = jnp.concatenate(
+            [chunk, jnp.zeros((pad, n, 3), jnp.float32)], axis=0)
+    return chunk, pad
+
+
+def stack_requests(clouds: Sequence, n_points: int) -> jnp.ndarray:
+    """Stack single [N, 3] request clouds into a [r, N, 3] chunk."""
+    arr = np.stack([np.asarray(c, np.float32) for c in clouds], axis=0)
+    assert arr.ndim == 3 and arr.shape[1:] == (n_points, 3), \
+        f"requests must be [N={n_points}, 3] clouds; got {arr.shape[1:]}"
+    return jnp.asarray(arr)

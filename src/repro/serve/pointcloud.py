@@ -24,7 +24,6 @@ callers by the pytest config).
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 from typing import Dict, List
 
@@ -35,30 +34,12 @@ from repro.api import compat
 from repro.api.build import build
 from repro.api.spec import PipelineSpec
 from repro.core import sampling
+from repro.serve import batching
+from repro.serve.batching import PointCloudStats
+
+__all__ = ["PointCloudEngine", "PointCloudStats"]
 
 _UNSET = object()
-
-
-@dataclasses.dataclass
-class PointCloudStats:
-    requests: int = 0          # real samples served
-    batches: int = 0           # jitted fixed-shape dispatches
-    padded: int = 0            # dummy pad samples computed
-    compile_s: float = 0.0     # time spent in warmup compiles
-    serve_s: float = 0.0       # device time in the jitted dispatch loop
-    host_s: float = 0.0        # host-side padding / array conversion
-
-    @property
-    def samples_per_s(self) -> float:
-        """Device throughput: host-side queue prep (array conversion,
-        pad-to-batch) is tracked separately in ``host_s``."""
-        return self.requests / max(self.serve_s, 1e-9)
-
-    def reset(self) -> None:
-        """Zero every counter/timer (a fresh measurement window)."""
-        fresh = PointCloudStats()
-        for f in dataclasses.fields(self):
-            setattr(self, f.name, getattr(fresh, f.name))
 
 
 class PointCloudEngine:
@@ -118,17 +99,12 @@ class PointCloudEngine:
 
     def _chunk_queue(self, pts: jnp.ndarray) -> List[jnp.ndarray]:
         """Host-side queue prep: split to ``max_batch`` chunks, zero-pad
-        the last.  Kept out of the serve timer — it is array plumbing,
-        not device throughput."""
-        r, n = pts.shape[0], pts.shape[1]
+        the last (shared core in ``repro.serve.batching``).  Kept out of
+        the serve timer — it is array plumbing, not device throughput."""
         chunks = []
-        for i in range(0, r, self.max_batch):
-            chunk = pts[i:i + self.max_batch]
-            pad = self.max_batch - chunk.shape[0]
-            if pad:
-                chunk = jnp.concatenate(
-                    [chunk, jnp.zeros((pad, n, 3), jnp.float32)], axis=0)
-                self.stats.padded += pad
+        for chunk in batching.split_queue(pts, self.max_batch):
+            chunk, pad = batching.pad_to_batch(chunk, self.max_batch)
+            self.stats.padded += pad
             chunks.append(chunk)
         return chunks
 
@@ -147,14 +123,10 @@ class PointCloudEngine:
         work); padding/conversion lands in ``stats.host_s``.
         """
         t_host = time.time()
-        pts = jnp.asarray(points, jnp.float32)
-        if pts.size == 0:                           # drained queue
+        pts = batching.as_point_queue(points, self.cfg.n_points)
+        if pts.shape[0] == 0:                       # drained queue
             return jnp.zeros((0, self.cfg.n_classes), jnp.float32)
-        if pts.ndim == 2:
-            pts = pts[None]
-        r, n = pts.shape[0], pts.shape[1]
-        assert n == self.cfg.n_points, \
-            f"engine is fixed-shape: got N={n}, expected {self.cfg.n_points}"
+        r = pts.shape[0]
         chunks = self._chunk_queue(pts)
         self.stats.host_s += time.time() - t_host
 

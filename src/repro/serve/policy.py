@@ -1,0 +1,124 @@
+"""SLO-aware batching policies for the async serving engine.
+
+The FPGA pipeline of the paper is throughput-optimal only when fed
+full fixed-shape batches; real request streams are ragged and bursty.
+A :class:`BatchPolicy` is the scheduler that arbitrates between the
+two: given the current queue state it decides how many requests (if
+any) are worth a dispatch *right now*.
+
+Policies live in a :data:`POLICIES` registry mirroring
+``repro.api.registry`` — ``PipelineSpec.policy`` names an entry by
+string key and ``PipelineSpec.slo_ms`` parametrizes it, so a new
+scheduling strategy is a registry entry, not a new engine:
+
+    from repro.serve.policy import register_policy, BatchPolicy
+
+    @register_policy("my-policy")
+    class MyPolicy(BatchPolicy):
+        def decide(self, depth, oldest_wait_ms, max_batch): ...
+
+Determinism contract: ``decide`` is a pure function of its arguments —
+the engine derives ``oldest_wait_ms`` from an injectable clock and
+passes it in, so policies never read wall time themselves.  That is
+what lets the virtual-clock harness (``tests/serving/harness.py``)
+script arrival traces and assert exact dispatch sizes.
+"""
+from __future__ import annotations
+
+from repro.api.registry import Registry
+
+POLICIES = Registry("policy")
+register_policy = POLICIES.register
+
+
+class BatchPolicy:
+    """Decides, from queue state alone, how many requests to dispatch.
+
+    Args (constructor): every policy accepts ``slo_ms`` — the
+    per-request latency objective from ``PipelineSpec.slo_ms`` —
+    even if (like :class:`FixedBatch`) it ignores it, so the engine
+    can instantiate any registry entry uniformly.
+    """
+
+    def __init__(self, slo_ms: float = 0.0):
+        self.slo_ms = float(slo_ms)
+
+    def decide(self, depth: int, oldest_wait_ms: float,
+               max_batch: int) -> int:
+        """Dispatch size for the current queue state (0 = keep waiting).
+
+        Args:
+          depth: queued (not yet dispatched) request count.
+          oldest_wait_ms: how long the head-of-line request has waited.
+          max_batch: the engine's fixed dispatch shape (the return value
+            is clamped to ``min(depth, max_batch)`` by the engine).
+        """
+        raise NotImplementedError
+
+    def describe(self) -> str:
+        return type(self).__name__
+
+
+@register_policy("fixed")
+class FixedBatch(BatchPolicy):
+    """Throughput-greedy: dispatch only full batches.
+
+    Never computes a pad lane during steady traffic — a partial tail
+    waits in the queue until ``flush()`` (or more arrivals) and pays
+    whatever latency that costs.  ``slo_ms`` is accepted and ignored.
+    """
+
+    def decide(self, depth: int, oldest_wait_ms: float,
+               max_batch: int) -> int:
+        return max_batch if depth >= max_batch else 0
+
+    def describe(self) -> str:
+        return "FixedBatch(full batches only)"
+
+
+@register_policy("deadline")
+class DeadlineBatch(BatchPolicy):
+    """Latency-SLO batching: fill up, but never break the deadline.
+
+    Dispatches a full batch the moment the queue can fill one;
+    otherwise it lets requests accumulate until the head-of-line
+    request is about to exceed the per-request SLO, then dispatches
+    the partial batch (pad lanes are the price of the deadline).
+
+    ``slo_ms = 0`` means "no waiting allowed": any non-empty queue
+    dispatches immediately — the latency-greedy extreme.
+
+    Args:
+      slo_ms: per-request latency objective (queue wait budget).
+      dispatch_ms: estimated service time of one dispatch, reserved
+        out of the budget so the *completed* latency meets the SLO;
+        0 spends the whole budget on queue wait.
+    """
+
+    def __init__(self, slo_ms: float = 50.0, dispatch_ms: float = 0.0):
+        super().__init__(slo_ms)
+        self.dispatch_ms = float(dispatch_ms)
+
+    def decide(self, depth: int, oldest_wait_ms: float,
+               max_batch: int) -> int:
+        if depth >= max_batch:
+            return max_batch
+        budget_ms = max(0.0, self.slo_ms - self.dispatch_ms)
+        if depth and oldest_wait_ms >= budget_ms:
+            return depth
+        return 0
+
+    def describe(self) -> str:
+        return (f"DeadlineBatch(slo_ms={self.slo_ms:g}, "
+                f"dispatch_ms={self.dispatch_ms:g})")
+
+
+def make_policy(name_or_policy, slo_ms: float = 0.0) -> BatchPolicy:
+    """Resolve a policy: pass instances through, build registry entries.
+
+    A string key instantiates ``POLICIES[name](slo_ms=slo_ms)`` —
+    unknown keys raise a ``KeyError`` listing the registered names.
+    """
+    if isinstance(name_or_policy, BatchPolicy):
+        return name_or_policy
+    return POLICIES.get(name_or_policy)(slo_ms=slo_ms)

@@ -1,0 +1,86 @@
+"""Serving-suite scaffolding.
+
+* Path bootstrap mirroring ``tests/conftest.py`` (works from a bare
+  checkout or an installed package) plus this directory itself, so the
+  shared ``harness`` module imports under any pytest import mode.
+* One session-frozen tiny pipeline + request clouds: every serving test
+  reuses the same compiled executable, keeping the whole suite inside
+  its deterministic-under-60s budget.
+"""
+from __future__ import annotations
+
+import pathlib
+import sys
+
+import pytest
+
+_HERE = pathlib.Path(__file__).resolve().parent
+_ROOT = _HERE.parents[1]
+for module, path in (("repro", _ROOT / "src"), ("benchmarks", _ROOT)):
+    try:
+        __import__(module)
+    except ImportError:
+        sys.path.insert(0, str(path))
+if str(_HERE) not in sys.path:          # `import harness`
+    sys.path.insert(0, str(_HERE))
+
+from harness import SEED, tiny_serving_spec  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def tiny_spec():
+    return tiny_serving_spec()
+
+
+@pytest.fixture(scope="session")
+def tiny_params(tiny_spec):
+    import jax
+
+    from repro.models import pointmlp as PM
+    return PM.pointmlp_init(jax.random.PRNGKey(0),
+                            tiny_spec.to_model_config())
+
+
+@pytest.fixture(scope="session")
+def tiny_pipeline(tiny_spec, tiny_params):
+    from repro.api.build import build
+    return build(tiny_spec, tiny_params)
+
+
+@pytest.fixture(scope="session")
+def clouds(tiny_spec):
+    """Twelve request clouds [12, N, 3] shared by every trace."""
+    import jax
+
+    from repro.data import pointclouds
+    pts, _ = pointclouds.make_batch(jax.random.PRNGKey(1),
+                                    tiny_spec.n_points, 12)
+    return pts
+
+
+@pytest.fixture(scope="session")
+def solo_reference(tiny_pipeline):
+    """``ref(cloud, max_batch) -> [n_classes]`` — the solo-run logits a
+    request must reproduce bit-identically no matter how the async
+    engine batched it (pad to the fixed dispatch shape, seed LFSR
+    state).  Memoized per (cloud id, max_batch)."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import sampling
+    from repro.serve import batching
+
+    cache = {}
+
+    def ref(cloud, max_batch: int) -> np.ndarray:
+        key = (cloud.tobytes() if isinstance(cloud, np.ndarray)
+               else np.asarray(cloud).tobytes(), max_batch)
+        if key not in cache:
+            batch, _ = batching.pad_to_batch(
+                jnp.asarray(cloud, jnp.float32)[None], max_batch)
+            state = sampling.seed_streams(SEED, max(max_batch, 64))
+            logits, _ = tiny_pipeline.infer(batch, jnp.array(state))
+            cache[key] = np.asarray(logits[0])
+        return cache[key]
+
+    return ref

@@ -1,0 +1,113 @@
+"""Deterministic serving-test harness: virtual clock + scripted traces.
+
+Schedulers rot without tests, and scheduler tests rot into flakes when
+they sleep.  This harness removes wall time entirely: the engine's
+injectable clock is a :class:`VirtualClock` the driver advances in
+fixed ticks, arrivals are scripted :class:`Arrival` lists (bursty /
+trickle / steady generators below), and :func:`run_trace` interleaves
+clock advances, ``submit()`` and ``pump()`` exactly the same way on
+every run — dispatch sizes, future resolution order, and per-request
+latencies are all exactly reproducible, so tests assert equalities,
+not timing tolerances.
+
+Reused by every module under ``tests/serving``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+SEED = 7
+TINY = dict(n_points=128, embed_dim=16, k_neighbors=8)
+
+
+def tiny_serving_spec(**overrides):
+    """The tiny fused-fp32 serving spec all serving tests build on."""
+    from repro.api import lite_spec
+    over = dict(precision="fp32", backend="ref")
+    over.update(TINY)
+    over.update(overrides)
+    return lite_spec(8).replace(**over).serving()
+
+
+class VirtualClock:
+    """A manually advanced monotonic clock (seconds).
+
+    Inject as ``AsyncPointCloudEngine(..., clock=clock)``: the engine
+    reads it for request timestamps and policy wait computation, and
+    only the driver ever advances it — no sleeps anywhere.
+    """
+
+    def __init__(self, start: float = 0.0):
+        self.now = float(start)
+
+    def __call__(self) -> float:
+        return self.now
+
+    def advance(self, dt: float) -> None:
+        assert dt >= 0, "a monotonic clock never rewinds"
+        self.now += dt
+
+
+@dataclasses.dataclass(frozen=True)
+class Arrival:
+    """One scripted request: ``cloud`` arrives at ``t_ms`` on the
+    virtual clock."""
+    t_ms: float
+    cloud: object          # [N, 3] point cloud
+
+
+def bursty_trace(clouds: Sequence, burst: int = 4,
+                 burst_gap_ms: float = 50.0,
+                 start_ms: float = 0.0) -> List[Arrival]:
+    """Groups of ``burst`` requests arriving at the same instant,
+    bursts separated by ``burst_gap_ms`` — the batch-friendly extreme."""
+    return [Arrival(start_ms + (i // burst) * burst_gap_ms, c)
+            for i, c in enumerate(clouds)]
+
+
+def trickle_trace(clouds: Sequence, gap_ms: float = 40.0,
+                  start_ms: float = 0.0) -> List[Arrival]:
+    """One request every ``gap_ms`` — arrivals far slower than batch
+    fill, the latency-policy stress case."""
+    return [Arrival(start_ms + i * gap_ms, c)
+            for i, c in enumerate(clouds)]
+
+
+def steady_trace(clouds: Sequence, gap_ms: float = 5.0,
+                 start_ms: float = 0.0) -> List[Arrival]:
+    """Evenly spaced arrivals at a moderate rate — partial and full
+    dispatches mix."""
+    return trickle_trace(clouds, gap_ms=gap_ms, start_ms=start_ms)
+
+
+def run_trace(engine, trace: Sequence[Arrival], clock: VirtualClock,
+              tick_ms: float = 1.0, drain_ms: float = 500.0,
+              flush: bool = True) -> List:
+    """Drive the engine through a scripted arrival trace, deterministically.
+
+    Advances the virtual clock in ``tick_ms`` steps, pumping the engine
+    on every tick; at each arrival time the cloud is submitted and the
+    engine pumped once more.  After the last arrival the clock keeps
+    ticking (up to ``drain_ms``) so deadline policies fire on their own
+    schedule; ``flush=True`` then drains whatever a policy would hold
+    forever (e.g. ``fixed``'s partial tail).
+
+    Returns the futures in submission order.
+    """
+    futures = []
+    for arrival in sorted(trace, key=lambda a: a.t_ms):
+        target_s = arrival.t_ms / 1e3
+        assert target_s >= clock(), "trace arrivals must not precede clock"
+        while clock() < target_s:
+            clock.advance(min(tick_ms / 1e3, target_s - clock()))
+            engine.pump()
+        futures.append(engine.submit(arrival.cloud))
+        engine.pump()
+    deadline_s = clock() + drain_ms / 1e3
+    while engine.pending and clock() < deadline_s:
+        clock.advance(tick_ms / 1e3)
+        engine.pump()
+    if flush:
+        engine.flush()
+    return futures
