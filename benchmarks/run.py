@@ -113,6 +113,44 @@ def bench_specs() -> None:
               derived.replace(",", ";"))
 
 
+def bench_spec_sharded() -> None:
+    """The ``spec_sharded`` row: data-parallel batch dispatch.
+
+    Splits the fixed dispatch over however many JAX devices are
+    available (8 on the CI step, which forces host devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``); on a
+    single-device host the row reports unavailable with the recipe,
+    mirroring how the real ``pallas`` row degrades off-TPU.
+    """
+    import jax
+
+    from benchmarks import serve_pointcloud as sp
+    from repro.api import lite_spec
+    from repro.data import pointclouds
+    from repro.models import pointmlp as PM
+    from repro.serve.pointcloud import PointCloudEngine
+
+    n_dev = jax.device_count()
+    shards = 8 if n_dev >= 8 else (2 if n_dev >= 2 else 1)
+    if shards == 1:
+        _emit("spec_sharded", 0.0,
+              "unavailable=single-device (set XLA_FLAGS="
+              "--xla_force_host_platform_device_count=8)")
+        return
+    spec = lite_spec(pointclouds.N_CLASSES).replace(
+        n_points=128, embed_dim=16, k_neighbors=8,
+        precision="fp32").serving(data_shards=shards)
+    params = PM.pointmlp_init(jax.random.PRNGKey(0), spec.to_model_config())
+    pts, _ = pointclouds.make_batch(jax.random.PRNGKey(1), spec.n_points,
+                                    shards)
+    eng = PointCloudEngine(params, spec, max_batch=shards, seed=0)
+    eng.warmup()                 # keep compile time out of the row
+    t0 = time.time()
+    sps, _ = sp.measure(eng, pts, iters=1)
+    _emit("spec_sharded", (time.time() - t0) * 1e6,
+          f"data_shards={shards};devices={n_dev};SPS={sps:.1f}")
+
+
 def bench_spec_async() -> None:
     """One row per registered batching policy (async engine smoke).
 
@@ -191,6 +229,7 @@ def main() -> None:
     bench_table2()
     bench_table3()
     bench_specs()
+    bench_spec_sharded()
     bench_spec_async()
     bench_serve_pointcloud(args.quick)
     if not args.quick:

@@ -67,10 +67,19 @@ def build(spec: PipelineSpec, params: Dict, *, jit: bool = True,
             backend=backend, shared_urs=spec.shared_urs,
             per_sample_norm=spec.per_sample_norm)
 
+    mesh = None
+    if spec.data_shards > 1:
+        # Shard step: after fuse/quantize, before jit — the frozen
+        # forward is split batch-wise over a 1-D device mesh.  Deferred
+        # import: repro.serve sits above this package in the import
+        # graph (mirrors the policy-registry deferral in spec.validate).
+        from repro.serve.sharding import shard_forward
+        fwd, mesh = shard_forward(fwd, spec)
+
     fn = jax.jit(fwd, donate_argnums=(2,) if donate_lfsr else ()) \
         if jit else fwd
     return FrozenPipeline(spec=spec, params=frozen, model_config=cfg,
-                          _fn=fn)
+                          _fn=fn, mesh=mesh)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,6 +94,7 @@ class FrozenPipeline:
     params: Dict
     model_config: Any            # resolved deploy PointMLPConfig
     _fn: Any = dataclasses.field(repr=False)
+    mesh: Any = None             # 1-D device mesh (data_shards > 1 only)
 
     def infer(self, pts: jnp.ndarray,
               lfsr_state: Optional[jnp.ndarray] = None
@@ -93,15 +103,31 @@ class FrozenPipeline:
 
         Args:
           pts: [B, N, 3] point clouds (N == spec.n_points).
-          lfsr_state: uint32 [>=B] LFSR streams (URS specs only).
+          lfsr_state: uint32 [>=B] LFSR streams (URS specs only) —
+            shorter states used to silently alias streams inside the
+            sampler's index math; now rejected here.
 
         Returns: (logits [B, n_classes], advanced LFSR state).
         """
+        if (lfsr_state is not None and pts.ndim >= 1
+                and lfsr_state.shape[0] < pts.shape[0]):
+            raise ValueError(
+                f"LFSR state has {lfsr_state.shape[0]} streams for a "
+                f"batch of {pts.shape[0]}; per-lane URS needs one "
+                f"stream per lane — size the state from the dispatch "
+                f"batch, e.g. pipeline.seed_state(seed, max_batch)")
         return self._fn(self.params, pts, lfsr_state)
 
     def seed_state(self, seed: int, n_streams: int = 64) -> jnp.ndarray:
         """Fresh LFSR streams for this pipeline's URS sampler — the
-        paper's "initialize the LFSRs with the same starting states"."""
+        paper's "initialize the LFSRs with the same starting states".
+
+        Args:
+          n_streams: how many parallel streams — size this from the
+            consumer's dispatch batch (the serving engines pass their
+            ``max_batch``); the historical 64-stream default covers
+            batches up to 64, and ``infer`` rejects shorter states.
+        """
         from repro.core import sampling
         return sampling.seed_streams(seed, n_streams)
 
@@ -130,6 +156,11 @@ class FrozenPipeline:
             f"  precision : {prec}",
             f"  fusion    : {'BN folded into (w, b)' if s.fuse else 'off'}",
             f"  backend   : {s.backend}",
+            f"  sharding  : "
+            + (f"{s.data_shards}-way data-parallel over mesh axis "
+               f"'data' ({next(iter(self.mesh.devices.flat)).platform} "
+               f"x{self.mesh.size})"
+               if self.mesh is not None else "single-device"),
             f"  flops     : {self.flops() / 1e6:.1f} MFLOP/sample",
             f"  params    : {tree_size_bytes(self.params)} bytes",
         ]

@@ -77,10 +77,16 @@ class PipelineSpec:
     # ---- batch semantics ----
     shared_urs: bool = False
     per_sample_norm: bool = False
+    # ---- dispatch sharding (``repro.serve.sharding``): split every
+    # batch dispatch over a 1-D device mesh, ``batch // data_shards``
+    # lanes per device, params replicated.  1 = single-device (today's
+    # behaviour); >1 needs that many JAX devices at build time. ----
+    data_shards: int = 1
     # ---- serving policy (async engine; registry keys in
     # ``repro.serve.policy.POLICIES``) ----
     policy: str = "fixed"
     slo_ms: float = 0.0
+    dispatch_ms: float = 0.0
 
     def __post_init__(self):
         if self.precision not in PRECISIONS:
@@ -91,12 +97,20 @@ class PipelineSpec:
                              f"got {self.affine_mode!r}")
         if self.slo_ms < 0:
             raise ValueError(f"slo_ms must be >= 0, got {self.slo_ms!r}")
+        if self.dispatch_ms < 0:
+            raise ValueError(
+                f"dispatch_ms must be >= 0, got {self.dispatch_ms!r}")
+        if not isinstance(self.data_shards, int) or self.data_shards < 1:
+            raise ValueError(f"data_shards must be a positive int, "
+                             f"got {self.data_shards!r}")
 
     def replace(self, **kw) -> "PipelineSpec":
         return dataclasses.replace(self, **kw)
 
     def serving(self, policy: str | None = None,
-                slo_ms: float | None = None) -> "PipelineSpec":
+                slo_ms: float | None = None,
+                dispatch_ms: float | None = None,
+                data_shards: int | None = None) -> "PipelineSpec":
         """The streaming-deployment rendering of this spec: one sampler
         services the batch, per-cloud normalization statistics — the
         serving engines' queue-order/dispatch-invariance contract.
@@ -108,12 +122,21 @@ class PipelineSpec:
           slo_ms: per-request latency objective handed to the policy
             (the ``deadline`` policy's queue-wait budget); None keeps
             the current field.
+          dispatch_ms: estimated service time of one dispatch, reserved
+            out of the SLO budget by deadline-style policies; None
+            keeps the current field.
+          data_shards: split every dispatch over this many devices
+            (``repro.serve.sharding``); None keeps the current field.
         """
         kw = dict(shared_urs=True, per_sample_norm=True)
         if policy is not None:
             kw["policy"] = policy
         if slo_ms is not None:
             kw["slo_ms"] = slo_ms
+        if dispatch_ms is not None:
+            kw["dispatch_ms"] = dispatch_ms
+        if data_shards is not None:
+            kw["data_shards"] = data_shards
         return self.replace(**kw)
 
     def validate(self) -> "PipelineSpec":

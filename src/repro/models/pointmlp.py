@@ -241,8 +241,38 @@ def pointmlp_infer_with(params: Dict, cfg: PointMLPConfig,
     fused params every CBR is a single matmul+bias+ReLU lowered by
     ``backend``.
 
+    Under full serving semantics (``shared_urs`` *and*
+    ``per_sample_norm``) lanes are mathematically independent — one
+    index sequence serves the batch, every cloud normalizes with its
+    own statistics — and the walk is lowered as a ``lax.map`` over
+    lanes: each lane runs a single-cloud executable traced once at a
+    fixed shape, so a lane's logits are *bitwise* independent of the
+    dispatch batch size.  That is the serving engines' dispatch-
+    invariance contract made shape-independent, and what makes a
+    ``data_shards``-split dispatch (``repro.serve.sharding``) golden-
+    equivalent to the single-device one: XLA's gemm reduction blocking
+    is batch-shape-dependent, so the batched lowering is bit-identical
+    only within one dispatch shape.  FLOPs are unchanged (the batch
+    dim only ever widens gemm M; every per-lane gemm keeps its full
+    S*k spatial extent); the scan serializes lanes on one device for a
+    ~10% dispatch-time cost at batch 8 on CPU — recovered many times
+    over once ``data_shards`` spreads the lanes across devices.
+
     Returns: (logits [B, n_classes], advanced lfsr state).
     """
+    if shared_urs and per_sample_norm:
+        def lane(cloud):
+            logits, _, state = _forward(
+                params, cfg, cloud[None], lfsr_state, train=False,
+                sampler=sampler, grouper=grouper, backend=backend,
+                shared_urs=True, per_sample_norm=True)
+            return logits[0], state
+
+        logits, states = jax.lax.map(lane, xyz)
+        if lfsr_state is None:
+            return logits, None
+        # Every lane advances the shared state identically; return one.
+        return logits, jax.tree_util.tree_map(lambda s: s[0], states)
     logits, _, lfsr_state = _forward(params, cfg, xyz, lfsr_state,
                                      train=False, sampler=sampler,
                                      grouper=grouper, backend=backend,

@@ -74,7 +74,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api.build import FrozenPipeline, build
-from repro.core import sampling
 from repro.serve import batching
 from repro.serve.batching import PointCloudStats
 from repro.serve.policy import BatchPolicy, make_policy
@@ -205,9 +204,12 @@ class AsyncPointCloudEngine:
                 "spec.serving()")
         self.cfg = pipeline.model_config
         self.max_batch = int(max_batch)
+        batching.check_shard_batch(self.max_batch, self.spec.data_shards)
         if policy is None:
             policy = self.spec.policy
-        self.policy: BatchPolicy = make_policy(policy, slo_ms=self.spec.slo_ms)
+        self.policy: BatchPolicy = make_policy(
+            policy, slo_ms=self.spec.slo_ms,
+            dispatch_ms=self.spec.dispatch_ms)
         self.stats = PointCloudStats()
         # Per-request latency log, resolve order; bounded so an
         # always-on server never grows it past the recent window.
@@ -215,7 +217,9 @@ class AsyncPointCloudEngine:
         self.latencies_ms: collections.deque = collections.deque(
             maxlen=10_000)
         self._clock = clock
-        self._lfsr0 = sampling.seed_streams(seed, max(self.max_batch, 64))
+        # One stream per dispatch lane, sized from max_batch (the old
+        # 64-stream floor under-provisioned max_batch > 64).
+        self._lfsr0 = pipeline.seed_state(seed, self.max_batch)
         self._queue: collections.deque = collections.deque()
         self._inflight: Optional[_Inflight] = None
         self._seq = 0

@@ -46,20 +46,64 @@ class PointCloudStats:
             setattr(self, f.name, getattr(fresh, f.name))
 
 
+def _request_shapes(clouds) -> str:
+    """The distinct per-request shapes of a ragged input, for errors.
+
+    Defensive by construction — it only runs inside an error path, so
+    an element that is itself malformed (nested-ragged, non-numeric)
+    must yield a placeholder, never a second exception.
+    """
+    try:
+        items = list(clouds)
+    except TypeError:
+        return f"<{type(clouds).__name__}>"
+    shapes = []
+    for c in items:
+        try:
+            s = str(np.asarray(c).shape)
+        except Exception:                     # noqa: BLE001 — see above
+            s = f"<ragged {type(c).__name__}>"
+        if s not in shapes:
+            shapes.append(s)
+    return ", ".join(shapes)
+
+
 def as_point_queue(points, n_points: int) -> jnp.ndarray:
     """Normalize a ragged classify() input to a [R, N, 3] float32 queue.
 
     Accepts a [R, N, 3] array, a single [N, 3] cloud, a list of clouds,
     or an empty input (R == 0 passes through as an empty queue).
+    Malformed input raises ``ValueError`` naming expected vs actual
+    shapes (never a bare ``assert`` — those vanish under ``python -O``
+    — and never a downstream broadcast error: a ragged request list is
+    diagnosed here, before ``jnp.asarray`` would die stacking it).
     """
-    pts = jnp.asarray(points, jnp.float32)
+    try:
+        pts = jnp.asarray(points, jnp.float32)
+    except (ValueError, TypeError):
+        raise ValueError(
+            f"classify() takes [N={n_points}, 3] clouds of one shape; "
+            f"got a ragged or malformed request list with shapes "
+            f"[{_request_shapes(points)}]") from None
     if pts.size == 0:
         return pts.reshape(0, n_points, 3)
     if pts.ndim == 2:
         pts = pts[None]
-    assert pts.shape[1] == n_points, \
-        f"engine is fixed-shape: got N={pts.shape[1]}, expected {n_points}"
+    if pts.ndim != 3 or pts.shape[1:] != (n_points, 3):
+        raise ValueError(
+            f"engine is fixed-shape: expected [R, N={n_points}, 3] "
+            f"(or one [N, 3] cloud), got {tuple(pts.shape)}")
     return pts
+
+
+def check_shard_batch(max_batch: int, data_shards: int) -> None:
+    """Reject dispatch shapes the device mesh cannot split evenly
+    (shared by both engines' constructors, before any mesh exists)."""
+    if max_batch % data_shards:
+        raise ValueError(
+            f"data_shards={data_shards} must divide max_batch evenly: "
+            f"got max_batch={max_batch} (every fixed-shape dispatch is "
+            f"split across the device mesh)")
 
 
 def split_queue(pts: jnp.ndarray, max_batch: int) -> Iterator[jnp.ndarray]:
@@ -80,7 +124,9 @@ def pad_to_batch(chunk: jnp.ndarray, max_batch: int
     """
     r, n = chunk.shape[0], chunk.shape[1]
     pad = max_batch - r
-    assert pad >= 0, f"chunk of {r} exceeds max_batch={max_batch}"
+    if pad < 0:
+        raise ValueError(f"chunk of {r} requests exceeds the fixed "
+                         f"dispatch shape max_batch={max_batch}")
     if pad:
         chunk = jnp.concatenate(
             [chunk, jnp.zeros((pad, n, 3), jnp.float32)], axis=0)
@@ -88,8 +134,19 @@ def pad_to_batch(chunk: jnp.ndarray, max_batch: int
 
 
 def stack_requests(clouds: Sequence, n_points: int) -> jnp.ndarray:
-    """Stack single [N, 3] request clouds into a [r, N, 3] chunk."""
-    arr = np.stack([np.asarray(c, np.float32) for c in clouds], axis=0)
-    assert arr.ndim == 3 and arr.shape[1:] == (n_points, 3), \
-        f"requests must be [N={n_points}, 3] clouds; got {arr.shape[1:]}"
-    return jnp.asarray(arr)
+    """Stack single [N, 3] request clouds into a [r, N, 3] chunk.
+
+    Every cloud is shape-checked *before* ``np.stack`` so a ragged
+    request list raises a ``ValueError`` naming the offending shapes
+    instead of np.stack's broadcast error (and instead of a bare
+    ``assert`` stripped under ``python -O``).
+    """
+    arrs = [np.asarray(c, np.float32) for c in clouds]
+    bad = [(i, a.shape) for i, a in enumerate(arrs)
+           if a.shape != (n_points, 3)]
+    if bad:
+        raise ValueError(
+            f"requests must be [N={n_points}, 3] clouds; got "
+            + "; ".join(f"request {i}: shape {s}" for i, s in bad[:4])
+            + (f" (+{len(bad) - 4} more)" if len(bad) > 4 else ""))
+    return jnp.asarray(np.stack(arrs, axis=0))

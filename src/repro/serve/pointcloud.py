@@ -33,7 +33,6 @@ import jax.numpy as jnp
 from repro.api import compat
 from repro.api.build import build
 from repro.api.spec import PipelineSpec
-from repro.core import sampling
 from repro.serve import batching
 from repro.serve.batching import PointCloudStats
 
@@ -75,12 +74,16 @@ class PointCloudEngine:
                 quantize=None if quantize is _UNSET else quantize,
                 backend=None if backend is _UNSET else backend)
         self.max_batch = int(max_batch)
+        batching.check_shard_batch(self.max_batch, spec.data_shards)
         self.pipeline = build(spec, params, donate_lfsr=True)
         self.spec = self.pipeline.spec
         self.cfg = self.pipeline.model_config
         self.params = self.pipeline.params
         self.stats = PointCloudStats()
-        self._lfsr = sampling.seed_streams(seed, max(self.max_batch, 64))
+        # One LFSR stream per dispatch lane — sized from max_batch (the
+        # historical 64-stream floor silently under-provisioned
+        # max_batch > 64; pipeline.infer now rejects short states).
+        self._lfsr = self.pipeline.seed_state(seed, self.max_batch)
 
     def warmup(self) -> float:
         """Compile the ``(max_batch, n_points)`` executable — the one

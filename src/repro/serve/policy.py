@@ -25,6 +25,9 @@ script arrival traces and assert exact dispatch sizes.
 """
 from __future__ import annotations
 
+import inspect
+import warnings
+
 from repro.api.registry import Registry
 
 POLICIES = Registry("policy")
@@ -35,13 +38,16 @@ class BatchPolicy:
     """Decides, from queue state alone, how many requests to dispatch.
 
     Args (constructor): every policy accepts ``slo_ms`` — the
-    per-request latency objective from ``PipelineSpec.slo_ms`` —
-    even if (like :class:`FixedBatch`) it ignores it, so the engine
-    can instantiate any registry entry uniformly.
+    per-request latency objective from ``PipelineSpec.slo_ms`` — and
+    ``dispatch_ms`` — the estimated service time of one dispatch, from
+    ``PipelineSpec.dispatch_ms`` — even if (like :class:`FixedBatch`)
+    it ignores them, so the engine can instantiate any registry entry
+    uniformly from the spec's policy fields.
     """
 
-    def __init__(self, slo_ms: float = 0.0):
+    def __init__(self, slo_ms: float = 0.0, dispatch_ms: float = 0.0):
         self.slo_ms = float(slo_ms)
+        self.dispatch_ms = float(dispatch_ms)
 
     def decide(self, depth: int, oldest_wait_ms: float,
                max_batch: int) -> int:
@@ -65,7 +71,8 @@ class FixedBatch(BatchPolicy):
 
     Never computes a pad lane during steady traffic — a partial tail
     waits in the queue until ``flush()`` (or more arrivals) and pays
-    whatever latency that costs.  ``slo_ms`` is accepted and ignored.
+    whatever latency that costs.  ``slo_ms``/``dispatch_ms`` are
+    accepted and ignored.
     """
 
     def decide(self, depth: int, oldest_wait_ms: float,
@@ -92,12 +99,21 @@ class DeadlineBatch(BatchPolicy):
       slo_ms: per-request latency objective (queue wait budget).
       dispatch_ms: estimated service time of one dispatch, reserved
         out of the budget so the *completed* latency meets the SLO;
-        0 spends the whole budget on queue wait.
+        0 spends the whole budget on queue wait.  A reservation at or
+        above a positive SLO leaves no wait budget at all — the policy
+        collapses into dispatch-on-arrival, which is almost always a
+        misconfiguration, so it warns.
     """
 
     def __init__(self, slo_ms: float = 50.0, dispatch_ms: float = 0.0):
-        super().__init__(slo_ms)
-        self.dispatch_ms = float(dispatch_ms)
+        super().__init__(slo_ms, dispatch_ms)
+        if self.slo_ms > 0 and self.dispatch_ms >= self.slo_ms:
+            warnings.warn(
+                f"DeadlineBatch: dispatch_ms={self.dispatch_ms:g} "
+                f"consumes the whole slo_ms={self.slo_ms:g} budget — "
+                f"the policy collapses into dispatch-on-arrival "
+                f"(every pump with a non-empty queue dispatches)",
+                stacklevel=3)
 
     def decide(self, depth: int, oldest_wait_ms: float,
                max_batch: int) -> int:
@@ -113,12 +129,34 @@ class DeadlineBatch(BatchPolicy):
                 f"dispatch_ms={self.dispatch_ms:g})")
 
 
-def make_policy(name_or_policy, slo_ms: float = 0.0) -> BatchPolicy:
+def make_policy(name_or_policy, slo_ms: float = 0.0,
+                dispatch_ms: float = 0.0) -> BatchPolicy:
     """Resolve a policy: pass instances through, build registry entries.
 
-    A string key instantiates ``POLICIES[name](slo_ms=slo_ms)`` —
-    unknown keys raise a ``KeyError`` listing the registered names.
+    A string key instantiates ``POLICIES[name](slo_ms=slo_ms,
+    dispatch_ms=dispatch_ms)`` — both spec policy fields reach every
+    registry entry (``dispatch_ms`` used to be dropped here, making
+    the documented service-time reservation unreachable from a
+    ``PipelineSpec``).  A plugin whose constructor predates
+    ``dispatch_ms`` still instantiates (with a warning when a
+    reservation would be silently ignored).  Unknown keys raise a
+    ``KeyError`` listing the registered names.
     """
     if isinstance(name_or_policy, BatchPolicy):
         return name_or_policy
-    return POLICIES.get(name_or_policy)(slo_ms=slo_ms)
+    cls = POLICIES.get(name_or_policy)
+    try:
+        sig = inspect.signature(cls).parameters.values()
+        accepts = any(p.name == "dispatch_ms"
+                      or p.kind is inspect.Parameter.VAR_KEYWORD
+                      for p in sig)
+    except (TypeError, ValueError):      # builtins / exotic callables
+        accepts = True
+    if accepts:
+        return cls(slo_ms=slo_ms, dispatch_ms=dispatch_ms)
+    if dispatch_ms:
+        warnings.warn(
+            f"policy {name_or_policy!r} does not accept dispatch_ms; "
+            f"the spec's dispatch_ms={dispatch_ms:g} reservation is "
+            f"ignored", stacklevel=2)
+    return cls(slo_ms=slo_ms)

@@ -1,0 +1,106 @@
+"""Data-parallel sharded dispatch: split a batch over a 1-D device mesh.
+
+The software analogue of HLS4PC's multi-PE unrolling (and of PointAcc's
+accelerator array): one fixed-shape dispatch of ``max_batch`` lanes is
+physically split ``max_batch // data_shards`` lanes per device with a
+``shard_map`` over a ``("data",)`` mesh, params replicated.  Because the
+serving walk is lane-mapped (``repro.models.pointmlp``: under serving
+semantics every lane runs a fixed-shape single-cloud executable), the
+split is *bit-identical* to the single-device dispatch — sharding is
+purely a throughput decision, invisible to results, so both serving
+engines accept a sharded :class:`~repro.api.build.FrozenPipeline`
+with zero scheduler changes.
+
+LFSR placement follows the sampler semantics:
+
+* ``shared_urs`` (serving specs): one index sequence serves every lane,
+  so the state is *replicated* — each device reads stream 0, advances
+  the full state identically, and the advanced state stays replicated.
+* per-lane URS (``shared_urs=False``): lane ``b`` consumes stream
+  ``b``, so the streams are *split* with the lanes — which requires
+  exactly one stream per lane (state length == batch), checked at
+  trace time.
+
+``per_sample_norm`` is required either way: batch-statistic
+normalization couples lanes across the dispatch, which a device split
+would silently turn into shard-local statistics.
+
+``repro.sharding.context.use_mesh`` is installed around the dispatch so
+model code stays mesh-agnostic (anything consulting ``current_mesh()``
+sees the serving mesh, and the previous mesh is restored even when the
+dispatch raises).
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro import compat
+from repro.sharding import context
+
+__all__ = ["make_mesh", "shard_forward"]
+
+
+def make_mesh(data_shards: int) -> Mesh:
+    """A 1-D ``("data",)`` mesh over the first ``data_shards`` devices.
+
+    Raises ``ValueError`` when the host has fewer devices, with the
+    forced-host-device recipe for CPU testing in the message.
+    """
+    devices = jax.devices()
+    if data_shards > len(devices):
+        raise ValueError(
+            f"data_shards={data_shards} needs {data_shards} JAX devices "
+            f"but only {len(devices)} are available; on CPU, force host "
+            f"devices with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{data_shards}")
+    return Mesh(np.array(devices[:data_shards]), ("data",))
+
+
+def shard_forward(fwd: Callable, spec) -> Tuple[Callable, Mesh]:
+    """Wrap a built ``fwd(params, pts, lfsr)`` in a data-parallel
+    ``shard_map`` dispatch over ``spec.data_shards`` devices.
+
+    Returns ``(dispatch, mesh)``; ``dispatch`` has the same signature
+    and — given the lane-mapped serving walk — bit-identical results.
+    Shape contracts are checked at trace time with ``ValueError``
+    (``jax.jit`` surfaces them on the first call of a new shape):
+    the batch must divide ``data_shards``, and per-lane URS needs one
+    stream per lane.
+    """
+    if not spec.per_sample_norm:
+        raise ValueError(
+            "data_shards > 1 requires per-sample normalization "
+            "(spec.per_sample_norm, e.g. via spec.serving()): "
+            "batch-statistic normalization couples lanes across the "
+            "whole dispatch, so a device-split batch would silently "
+            "compute shard-local statistics and change results")
+    mesh = make_mesh(spec.data_shards)
+    lfsr_spec = P() if spec.shared_urs else P("data")
+    sharded = compat.shard_map(
+        fwd, mesh, in_specs=(P(), P("data"), lfsr_spec),
+        out_specs=(P("data"), lfsr_spec))
+
+    def dispatch(params, pts, lfsr):
+        with context.use_mesh(mesh):
+            batch = pts.shape[0]
+            if batch % spec.data_shards:
+                raise ValueError(
+                    f"data_shards={spec.data_shards} must divide the "
+                    f"dispatch batch evenly: got batch {batch} (the "
+                    f"engines pad to max_batch — pick a max_batch that "
+                    f"is a multiple of data_shards)")
+            if (lfsr is not None and not spec.shared_urs
+                    and lfsr.shape[0] != batch):
+                raise ValueError(
+                    f"per-lane URS under data_shards={spec.data_shards} "
+                    f"splits the LFSR streams with the lanes and needs "
+                    f"exactly one stream per lane: got {lfsr.shape[0]} "
+                    f"streams for batch {batch}")
+            return sharded(params, pts, lfsr)
+
+    return dispatch, mesh

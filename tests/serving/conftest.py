@@ -78,7 +78,8 @@ def solo_reference(tiny_pipeline):
         if key not in cache:
             batch, _ = batching.pad_to_batch(
                 jnp.asarray(cloud, jnp.float32)[None], max_batch)
-            state = sampling.seed_streams(SEED, max(max_batch, 64))
+            # One stream per lane, mirroring the engines' sizing.
+            state = sampling.seed_streams(SEED, max_batch)
             logits, _ = tiny_pipeline.infer(batch, jnp.array(state))
             cache[key] = np.asarray(logits[0])
         return cache[key]

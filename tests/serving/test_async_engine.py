@@ -6,6 +6,7 @@ mechanics, and SLO-policy dispatch sizing against scripted
 bursty/trickle/steady traces.  No wall-clock sleeps anywhere — every
 assertion is an equality, not a timing tolerance.
 """
+import jax
 import numpy as np
 import pytest
 from harness import (SEED, VirtualClock, bursty_trace, run_trace,
@@ -435,6 +436,52 @@ class TestPolicies:
             tiny_serving_spec().serving(policy="nope").validate()
         with pytest.raises(ValueError, match="slo_ms"):
             tiny_serving_spec().serving(slo_ms=-1.0)
+        with pytest.raises(ValueError, match="dispatch_ms"):
+            tiny_serving_spec().serving(dispatch_ms=-1.0)
+
+    def test_dispatch_ms_reaches_policy_from_spec(self, tiny_params):
+        """Regression: make_policy used to drop dispatch_ms, so the
+        documented service-time reservation was unreachable from a
+        PipelineSpec."""
+        spec = tiny_serving_spec().serving(policy="deadline",
+                                           slo_ms=20.0, dispatch_ms=5.0)
+        eng = AsyncPointCloudEngine.from_params(tiny_params, spec,
+                                                max_batch=2,
+                                                clock=VirtualClock())
+        assert eng.policy.dispatch_ms == 5.0
+        # budget = slo - dispatch = 15ms: a 15ms-old head dispatches.
+        assert eng.policy.decide(depth=1, oldest_wait_ms=14.9,
+                                 max_batch=4) == 0
+        assert eng.policy.decide(depth=1, oldest_wait_ms=15.0,
+                                 max_batch=4) == 1
+
+    def test_dispatch_ms_consuming_slo_warns_of_collapse(self):
+        with pytest.warns(UserWarning, match="dispatch-on-arrival"):
+            pol = DeadlineBatch(slo_ms=10.0, dispatch_ms=10.0)
+        assert pol.decide(depth=1, oldest_wait_ms=0.0, max_batch=4) == 1
+
+    def test_plugin_policy_without_dispatch_ms_still_instantiates(self):
+        """A registry plugin whose constructor predates dispatch_ms
+        keeps working; a dropped reservation warns."""
+        from repro.serve.policy import (BatchPolicy, make_policy,
+                                        register_policy)
+
+        @register_policy("_test_legacy_ctor")
+        class Legacy(BatchPolicy):
+            def __init__(self, slo_ms: float = 0.0):
+                super().__init__(slo_ms)
+
+            def decide(self, depth, oldest_wait_ms, max_batch):
+                return depth
+
+        try:
+            with pytest.warns(UserWarning, match="dispatch_ms"):
+                pol = make_policy("_test_legacy_ctor", slo_ms=1.0,
+                                  dispatch_ms=2.0)
+            assert pol.slo_ms == 1.0
+            assert make_policy("_test_legacy_ctor").slo_ms == 0.0
+        finally:
+            POLICIES.unregister("_test_legacy_ctor")
 
 
 # ------------------------------------------------------------------ #
@@ -489,3 +536,31 @@ class TestAsyncioShell:
         eng.flush()
         with pytest.raises(AssertionError, match="exactly once"):
             fut._resolve(fut.result(), 0.0)
+
+
+# ------------------------------------------------------------------ #
+# sharded dispatch through the virtual-clock harness                 #
+# ------------------------------------------------------------------ #
+
+class TestShardedDispatch:
+    @pytest.mark.skipif(
+        jax.device_count() < 8,
+        reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    def test_sharded_pipeline_bit_identical_on_steady_trace(
+            self, tiny_params, clouds, solo_reference):
+        """A data_shards=8 pipeline under the async engine, driven
+        through the scripted steady trace: the scheduler needs zero
+        changes and every request's logits equal its solo unsharded
+        run bit for bit (dispatch invariance extended across the
+        device mesh)."""
+        from repro.api.build import build
+        spec = tiny_serving_spec(data_shards=8)
+        clock = VirtualClock()
+        eng = AsyncPointCloudEngine(build(spec, tiny_params),
+                                    max_batch=8, policy="fixed",
+                                    seed=SEED, clock=clock)
+        futures = run_trace(eng, steady_trace(clouds, gap_ms=4.0), clock)
+        assert eng.stats.requests == len(clouds)
+        for cloud, fut in zip(clouds, futures):
+            np.testing.assert_array_equal(np.asarray(fut.result()),
+                                          solo_reference(cloud, 8))

@@ -140,17 +140,28 @@ class TestLFSRState:
     def test_state_advances_deterministically_across_calls(self, lite_setup):
         """Each fixed-shape dispatch consumes exactly sum(stage_samples)
         LFSR words from every stream, so the engine state after k calls
-        equals a pure lfsr_sequence advance — restart-stable."""
+        equals a pure lfsr_sequence advance — restart-stable.  The
+        engine provisions exactly one stream per dispatch lane
+        (max_batch), no longer a decoupled 64-stream floor."""
         cfg, params, pts = lite_setup
         eng = PointCloudEngine(params, serve_spec(cfg), max_batch=4,
                                seed=11)
+        assert eng.lfsr_state.shape == (4,)
         eng.classify(pts[:4])
         eng.classify(pts[:2])                        # 2 dispatches total
         per_call = sum(cfg.stage_samples)
         want, _ = sampling.lfsr_sequence(
-            sampling.seed_streams(11, max(4, 64)), 2 * per_call)
+            sampling.seed_streams(11, 4), 2 * per_call)
         np.testing.assert_array_equal(np.asarray(eng.lfsr_state),
                                       np.asarray(want))
+
+    def test_infer_rejects_state_shorter_than_batch(self, lite_setup):
+        """A short LFSR state used to silently alias streams inside the
+        sampler; FrozenPipeline.infer now rejects it up front."""
+        cfg, params, pts = lite_setup
+        eng = PointCloudEngine(params, serve_spec(cfg), max_batch=4)
+        with pytest.raises(ValueError, match="stream"):
+            eng.pipeline.infer(pts[:4], sampling.seed_streams(0, 2))
 
     def test_same_seed_same_results(self, lite_setup):
         cfg, params, pts = lite_setup
@@ -171,6 +182,50 @@ class TestLFSRState:
                                seed=6).classify(pts[:4])
         np.testing.assert_array_equal(np.asarray(eng.classify(pts[:4])),
                                       np.asarray(ref))
+
+
+class TestInputValidation:
+    """batching.py guards raise ValueError (never ``assert``, stripped
+    under ``python -O``; never a downstream np broadcast error)."""
+
+    def test_ragged_request_list_raises_value_error(self, lite_setup):
+        """Regression: a ragged list used to die inside jnp.asarray
+        with a broadcast error before any shape message."""
+        cfg, params, pts = lite_setup
+        eng = PointCloudEngine(params, serve_spec(cfg), max_batch=4)
+        ragged = [np.zeros((cfg.n_points, 3), np.float32),
+                  np.zeros((cfg.n_points // 2, 3), np.float32)]
+        with pytest.raises(ValueError, match="ragged"):
+            eng.classify(ragged)
+
+    def test_nested_ragged_element_still_diagnosed(self, lite_setup):
+        """An element that is itself ragged must not crash the error
+        path — the diagnostic names it instead."""
+        cfg, params, _ = lite_setup
+        eng = PointCloudEngine(params, serve_spec(cfg), max_batch=4)
+        nested = [[[0.0, 0.0, 0.0], [0.0, 0.0]],
+                  np.zeros((cfg.n_points, 3), np.float32)]
+        with pytest.raises(ValueError, match="ragged"):
+            eng.classify(nested)
+
+    def test_wrong_n_points_raises_with_expected_shape(self, lite_setup):
+        cfg, params, _ = lite_setup
+        eng = PointCloudEngine(params, serve_spec(cfg), max_batch=4)
+        with pytest.raises(ValueError, match=f"N={cfg.n_points}"):
+            eng.classify(np.zeros((2, cfg.n_points + 1, 3), np.float32))
+
+    def test_stack_requests_names_offending_requests(self, lite_setup):
+        from repro.serve import batching
+        cfg, *_ = lite_setup
+        good = np.zeros((cfg.n_points, 3), np.float32)
+        bad = np.zeros((7, 3), np.float32)
+        with pytest.raises(ValueError, match="request 1"):
+            batching.stack_requests([good, bad], cfg.n_points)
+
+    def test_pad_to_batch_rejects_oversized_chunk(self):
+        from repro.serve import batching
+        with pytest.raises(ValueError, match="max_batch"):
+            batching.pad_to_batch(jnp.zeros((5, 8, 3)), 4)
 
 
 class TestStats:
