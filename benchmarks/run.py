@@ -151,6 +151,72 @@ def bench_spec_sharded() -> None:
           f"data_shards={shards};devices={n_dev};SPS={sps:.1f}")
 
 
+def bench_spec_plan() -> None:
+    """Stage-plan rows: mixed precision ladder point + plan breakdown.
+
+    ``spec_mixed`` serves a per-stage-override spec (int8 stages 1-3,
+    fp32 stage 4 + head) through the engine and reports throughput plus
+    an accuracy proxy (mean |logits - fp32 logits|) next to the
+    all-fp32 / all-int8 endpoints — the paper's per-layer quantization
+    exploration as one spec field, expected to land *between* the two
+    uniform rows on both axes.  ``plan_breakdown`` prints the compiled
+    plan's per-stage FLOPs / weight-bytes for the mixed row.
+    """
+    import time as _time
+
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks import serve_pointcloud as sp
+    from repro.api import build, lite_spec
+    from repro.data import pointclouds
+    from repro.models import pointmlp as PM
+    from repro.serve.pointcloud import PointCloudEngine
+
+    base = lite_spec(pointclouds.N_CLASSES).replace(
+        n_points=128, embed_dim=16, k_neighbors=8,
+        precision="fp32").serving()
+    params = PM.pointmlp_init(jax.random.PRNGKey(0), base.to_model_config())
+    pts, _ = pointclouds.make_batch(jax.random.PRNGKey(1), base.n_points, 8)
+
+    rows = {
+        "spec_allfp32": base,
+        "spec_mixed": base.replace(
+            stage_precision=("int8", "int8", "int8", "fp32")),
+        "spec_allint8": base.replace(precision="int8"),
+    }
+    # Every row serves the same queue from the same seed, so the
+    # per-row logits are comparable; the fp32 row is the accuracy-proxy
+    # reference (its own err is 0 by construction).  Compile (warmup)
+    # and the err computation stay outside the timed region — the time
+    # column covers only measure(), like the sibling spec rows.
+    ref_logits = None
+    for name, spec in rows.items():
+        eng = PointCloudEngine(params, spec, max_batch=4, seed=0)
+        eng.warmup()
+        logits = eng.classify(pts)
+        if ref_logits is None:
+            ref_logits = logits
+        err = float(jnp.mean(jnp.abs(logits - ref_logits)))
+        t0 = _time.time()
+        sps, _ = sp.measure(eng, pts, iters=1)
+        _emit(name, (_time.time() - t0) * 1e6,
+              f"stage_precision="
+              f"{'/'.join(eng.pipeline.plan.stage_precision)};"
+              f"err_vs_fp32={err:.5f};SPS={sps:.1f}")
+
+    pipe = build(rows["spec_mixed"], params)
+    br = {}
+    for row in pipe.cost_breakdown():
+        stage = row["op"].split(".")[0]
+        agg = br.setdefault(stage, {"flops": 0, "w_bytes": 0})
+        agg["flops"] += row["flops"]
+        agg["w_bytes"] += row["w_bytes"]
+    _emit("plan_breakdown", 0.0,
+          ";".join(f"{s}={v['flops'] / 1e6:.2f}MF/{v['w_bytes']}B"
+                   for s, v in br.items()))
+
+
 def bench_spec_async() -> None:
     """One row per registered batching policy (async engine smoke).
 
@@ -229,6 +295,7 @@ def main() -> None:
     bench_table2()
     bench_table3()
     bench_specs()
+    bench_spec_plan()
     bench_spec_sharded()
     bench_spec_async()
     bench_serve_pointcloud(args.quick)

@@ -20,15 +20,19 @@ from __future__ import annotations
 
 from repro.api.build import FrozenPipeline, build
 from repro.api.compat import config_to_spec, spec_to_config
-from repro.api.registry import (BACKENDS, GROUPERS, SAMPLERS, Registry,
-                                register_backend, register_grouper,
-                                register_sampler)
+from repro.api.plan import StagePlan, lower
+from repro.api.registry import (BACKENDS, FUSED_OPS, GROUPERS, SAMPLERS,
+                                Registry, make_ball_grouper,
+                                register_backend, register_fused_op,
+                                register_grouper, register_sampler)
 from repro.api.spec import (PipelineSpec, compression_ladder_specs,
                             elite_spec, lite_spec, m2_spec)
 
 __all__ = [
-    "BACKENDS", "FrozenPipeline", "GROUPERS", "PipelineSpec", "Registry",
-    "SAMPLERS", "build", "compression_ladder_specs", "config_to_spec",
-    "elite_spec", "lite_spec", "m2_spec", "register_backend",
-    "register_grouper", "register_sampler", "spec_to_config",
+    "BACKENDS", "FUSED_OPS", "FrozenPipeline", "GROUPERS", "PipelineSpec",
+    "Registry", "SAMPLERS", "StagePlan", "build",
+    "compression_ladder_specs", "config_to_spec", "elite_spec",
+    "lite_spec", "lower", "m2_spec", "make_ball_grouper",
+    "register_backend", "register_fused_op", "register_grouper",
+    "register_sampler", "spec_to_config",
 ]

@@ -42,6 +42,7 @@ def build(spec: PipelineSpec, params: Dict, *, jit: bool = True,
         (serving engines that immediately replace their state with the
         returned one; invalid for callers that reuse the input buffer).
     """
+    from repro.api import plan as stage_plan
     from repro.core import fusion
     from repro.core.quant import QuantConfig, quantize_tree
     from repro.models import pointmlp as PM
@@ -52,12 +53,20 @@ def build(spec: PipelineSpec, params: Dict, *, jit: bool = True,
     frozen = params
     if spec.fuse:
         frozen, cfg = fusion.fuse_pointmlp(frozen, cfg)
-    if spec.precision == "int8":
+    # Lower the stage plan once: per-stage precision/backend overrides
+    # and the fused group->transfer path resolve here, and the plan's
+    # predicate drives a *selective* int8 export (only regions whose
+    # stage resolved to int8 are quantized — for a uniform-int8 spec
+    # this is the exact pre-plan whole-tree export).
+    plan = stage_plan.lower(spec, cfg)
+    if plan.any_int8:
         qcfg = QuantConfig(w_bits=min(spec.w_bits, 8), a_bits=spec.a_bits,
                            per_channel=spec.per_channel,
                            symmetric=spec.symmetric, backend="int8_ref")
-        frozen = quantize_tree(frozen, qcfg)
-        cfg = cfg.replace(quant=qcfg)
+        frozen = quantize_tree(frozen, qcfg,
+                               predicate=plan.quant_predicate())
+        cfg = cfg.replace(quant=qcfg if spec.precision == "int8"
+                          else QuantConfig(w_bits=32, a_bits=32))
     else:
         cfg = cfg.replace(quant=QuantConfig(w_bits=32, a_bits=32))
 
@@ -65,7 +74,7 @@ def build(spec: PipelineSpec, params: Dict, *, jit: bool = True,
         return PM.pointmlp_infer_with(
             p, cfg, pts, lfsr, sampler=sampler, grouper=grouper,
             backend=backend, shared_urs=spec.shared_urs,
-            per_sample_norm=spec.per_sample_norm)
+            per_sample_norm=spec.per_sample_norm, plan=plan)
 
     mesh = None
     if spec.data_shards > 1:
@@ -79,7 +88,7 @@ def build(spec: PipelineSpec, params: Dict, *, jit: bool = True,
     fn = jax.jit(fwd, donate_argnums=(2,) if donate_lfsr else ()) \
         if jit else fwd
     return FrozenPipeline(spec=spec, params=frozen, model_config=cfg,
-                          _fn=fn, mesh=mesh)
+                          _fn=fn, mesh=mesh, plan=plan)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,6 +104,7 @@ class FrozenPipeline:
     model_config: Any            # resolved deploy PointMLPConfig
     _fn: Any = dataclasses.field(repr=False)
     mesh: Any = None             # 1-D device mesh (data_shards > 1 only)
+    plan: Any = None             # compiled repro.api.plan.StagePlan
 
     def infer(self, pts: jnp.ndarray,
               lfsr_state: Optional[jnp.ndarray] = None
@@ -136,6 +146,23 @@ class FrozenPipeline:
         from repro.models import pointmlp as PM
         return PM.pointmlp_flops(self.model_config)
 
+    def flops_breakdown(self) -> Dict[str, int]:
+        """Per-stage-op MAC*2 counts (sums to :meth:`flops` exactly)."""
+        from repro.models import pointmlp as PM
+        return PM.pointmlp_flops_breakdown(self.model_config)
+
+    def cost_breakdown(self):
+        """Per-stage-op FLOPs / weight-bytes / activation-bytes rows,
+        derived from the compiled plan (precision overrides shrink
+        weight bytes; a fused group->transfer stage zeroes the grouped
+        tensor's HBM round-trip)."""
+        if self.plan is None:
+            raise ValueError(
+                "this FrozenPipeline carries no stage plan (constructed "
+                "directly rather than by build()); use build(spec, "
+                "params) or pointmlp_flops_breakdown(model_config)")
+        return self.plan.cost_breakdown(self.model_config)
+
     def describe(self) -> str:
         """Human-readable rendering of the compiled variant."""
         from repro.core.quant import tree_size_bytes
@@ -164,4 +191,15 @@ class FrozenPipeline:
             f"  flops     : {self.flops() / 1e6:.1f} MFLOP/sample",
             f"  params    : {tree_size_bytes(self.params)} bytes",
         ]
+        if self.plan is not None:
+            lines.append(f"  plan      : {len(self.plan.ops)} ops; "
+                         f"{self.plan.describe()}")
+            br = self.flops_breakdown()
+            stages = {}
+            for op, fl in br.items():
+                stages.setdefault(op.split(".")[0], 0)
+                stages[op.split(".")[0]] += fl
+            lines.append("  stage MFLOP: "
+                         + ", ".join(f"{k}={v / 1e6:.2f}"
+                                     for k, v in stages.items()))
         return "\n".join(lines)

@@ -1,0 +1,450 @@
+"""Stage-plan IR: compile a PipelineSpec into an explicit per-stage op plan.
+
+HLS4PC's claim is that the compression ladder is a *configuration
+sweep*; PointAcc's is that the mapping ops (sample / group / normalize)
+deserve first-class dataflow treatment next to the NN layers.  Both
+arguments land in the same place: the forward walk should be **data**,
+not code.  This module is that data — a small op IR
+
+    EmbedOp, SampleOp, GroupOp, FusedGroupTransferOp,
+    CBROp, ResBlockOp, PoolOp, HeadOp
+
+and ``lower(spec, cfg) -> StagePlan``, the one-shot compiler from a
+declarative :class:`~repro.api.spec.PipelineSpec` to the op sequence
+the model interpreter (``repro.models.pointmlp._forward``) executes.
+``repro.api.build`` lowers once per pipeline; every remaining ROADMAP
+component (a new grouper, a new backend, a fused mapping path) is a
+lowering rule, not a model edit.
+
+Per-stage overrides
+-------------------
+``PipelineSpec.stage_precision`` / ``stage_backend`` are 4-tuples (one
+entry per stage) resolved here, per :class:`CBROp`, at lowering time:
+``stage_precision=("int8", "int8", "int8", "fp32")`` quantizes stages
+1-3 and keeps stage 4 (and the embed/head, which follow the spec-level
+``precision``) in fp32 — the paper's per-layer quantization exploration
+as a spec field.  Lowering *warnings* use the ``"repro stage-plan:"``
+prefix, which the repo's pytest config escalates to an error in-tree
+(mirroring the legacy-API gate); lowering *errors* (bad tuple length,
+unknown key, unfusable combination) raise ``ValueError``/``KeyError``.
+
+Fused group->normalize->transfer
+--------------------------------
+With ``spec.fused_group="grouped_transfer"`` the ``GroupOp`` +
+transfer-``CBROp`` pair of each stage lowers to one
+:class:`FusedGroupTransferOp` executing a single fused gather +
+geometric-affine-normalize + matmul+bias+ReLU kernel
+(``repro.kernels.grouped_transfer``), so the ``[B, S, k, 2C]`` grouped
+tensor never round-trips through HBM between normalize and transfer —
+the dataflow the FPGA pipeline implies.  Fused entries live in the
+:data:`~repro.api.registry.FUSED_OPS` registry.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.api import registry
+from repro.api.spec import N_STAGES as _N_STAGES
+from repro.core.quant import QuantConfig, is_quantizable_leaf_path
+
+#: Lowering-warning prefix — escalated to an error in-tree by the
+#: pyproject ``filterwarnings`` gate (external callers just get the
+#: warning), exactly like the ``"repro legacy API:"`` prefix.
+WARN_PREFIX = "repro stage-plan: "
+
+_PALLAS_BACKENDS = ("pallas_interpret", "pallas")
+
+
+def plan_warn(msg: str, stacklevel: int = 3) -> None:
+    warnings.warn(f"{WARN_PREFIX}{msg}", UserWarning, stacklevel=stacklevel)
+
+
+# ------------------------------------------------------------- op IR ----
+
+@dataclasses.dataclass(frozen=True)
+class CBROp:
+    """One Conv(+folded BN)(+ReLU) layer, fully resolved.
+
+    ``path`` addresses the layer's param dict inside the model tree
+    (``("embed",)``, ``("stages", 2, "transfer")``, ...); ``fn`` is the
+    resolved backend callable from ``repro.api.registry.BACKENDS`` and
+    ``quant`` the exact :class:`QuantConfig` handed to it at runtime
+    (None = fp32).  ``precision`` / ``backend`` keep the registry keys
+    for introspection; they never re-resolve.
+    """
+    path: Tuple[Any, ...]
+    stage: Optional[int]            # owning stage, None for embed/head
+    act: bool
+    precision: str
+    backend: str
+    quant: Optional[QuantConfig] = dataclasses.field(compare=False,
+                                                     default=None)
+    fn: Optional[Callable] = dataclasses.field(repr=False, compare=False,
+                                               default=None)
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbedOp:
+    """Pointwise embedding conv: xyz [B,N,3] -> features [B,N,E]."""
+    cbr: CBROp
+
+
+@dataclasses.dataclass(frozen=True)
+class SampleOp:
+    """Pick stage centroids with the resolved sampler (FPS / URS / ...)."""
+    stage: int
+    n_samples: int
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupOp:
+    """Build normalized local neighborhoods with the resolved grouper:
+    (xyz, feats, idx) -> (new_xyz, center feats, grouped [B,S,k,2C])."""
+    stage: int
+    k: int
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedGroupTransferOp:
+    """A ``GroupOp`` + transfer-``CBROp`` pair lowered to one fused
+    gather + geometric-affine-normalize + matmul+bias+ReLU kernel
+    (``repro.api.registry.FUSED_OPS[kernel]``); the grouped
+    ``[B, S, k, 2C]`` tensor never leaves the kernel."""
+    stage: int
+    k: int
+    cbr: CBROp                      # the transfer layer it absorbs
+    kernel: str                     # FUSED_OPS registry key
+    fn: Optional[Callable] = dataclasses.field(repr=False, compare=False,
+                                               default=None)
+
+
+@dataclasses.dataclass(frozen=True)
+class ResBlockOp:
+    """Bottleneck residual block: relu(net2(net1(x)) + x)."""
+    stage: int
+    branch: str                     # "pre" ([B,S,k,C]) | "pos" ([B,S,C])
+    index: int
+    net1: CBROp
+    net2: CBROp                     # act=False; the ReLU runs post-add
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolOp:
+    """Max-pool: axis=2 pools neighbors ([B,S,k,C] -> [B,S,C]), axis=1
+    is the global pool before the head ([B,S,C] -> [B,C])."""
+    stage: Optional[int]
+    axis: int
+
+
+@dataclasses.dataclass(frozen=True)
+class HeadOp:
+    """3-layer MLP classifier; fc3 is a plain linear (no activation)."""
+    fc1: CBROp
+    fc2: CBROp
+    fc3_path: Tuple[Any, ...]
+    fc3_quant: Optional[QuantConfig] = dataclasses.field(compare=False,
+                                                         default=None)
+
+
+StageOp = Any   # union of the op dataclasses above
+
+
+# ---------------------------------------------------------- StagePlan ---
+
+@dataclasses.dataclass(frozen=True)
+class StagePlan:
+    """A compiled per-stage op plan — the executable rendering of one
+    :class:`~repro.api.spec.PipelineSpec` (or of a legacy config).
+
+    ``ops`` is the flat op sequence the interpreter walks; the
+    ``stage_*`` tuples record the resolved per-stage policy for
+    introspection, quantization and cost reporting.
+    """
+    name: str
+    ops: Tuple[StageOp, ...]
+    stage_precision: Tuple[str, ...]
+    stage_backend: Tuple[str, ...]
+    precision: str                  # embed + head precision
+    backend: str                    # embed + head backend key
+    fused_group: str = "none"
+
+    # ------------------------------------------------- introspection ----
+
+    def cbr_ops(self) -> List[CBROp]:
+        """Every CBR layer in execution order (fused transfers included)."""
+        out: List[CBROp] = []
+        for op in self.ops:
+            if isinstance(op, EmbedOp):
+                out.append(op.cbr)
+            elif isinstance(op, CBROp):
+                out.append(op)
+            elif isinstance(op, FusedGroupTransferOp):
+                out.append(op.cbr)
+            elif isinstance(op, ResBlockOp):
+                out.extend((op.net1, op.net2))
+            elif isinstance(op, HeadOp):
+                out.extend((op.fc1, op.fc2))
+        return out
+
+    @property
+    def mixed_precision(self) -> bool:
+        precs = set(self.stage_precision) | {self.precision}
+        return len(precs) > 1
+
+    @property
+    def any_int8(self) -> bool:
+        return "int8" in self.stage_precision or self.precision == "int8"
+
+    def quant_predicate(self) -> Callable[[tuple, Any], bool]:
+        """Predicate for :func:`repro.core.quant.quantize_tree` selecting
+        exactly the weight leaves whose owning region (stage / embed /
+        head) resolved to int8.  For a uniform-int8 plan this selects
+        the same leaves as the default predicate — the pre-plan export
+        — bit for bit."""
+        def pred(path: tuple, leaf: Any) -> bool:
+            if not (is_quantizable_leaf_path(path)
+                    and getattr(leaf, "ndim", 0) >= 2):
+                return False
+            s = _path_stage(path)
+            prec = self.precision if s is None else self.stage_precision[s]
+            return prec == "int8"
+        return pred
+
+    def describe(self) -> str:
+        """Compact per-stage rendering for ``FrozenPipeline.describe``."""
+        rows = []
+        fused = {op.stage for op in self.ops
+                 if isinstance(op, FusedGroupTransferOp)}
+        for s in range(_N_STAGES):
+            row = (f"stage {s + 1}: {self.stage_precision[s]}/"
+                   f"{self.stage_backend[s]}")
+            if s in fused:
+                row += f" [group->transfer fused: {self.fused_group}]"
+            rows.append(row)
+        rows.append(f"head: {self.precision}/{self.backend}")
+        return "; ".join(rows)
+
+    # ------------------------------------------------ cost breakdown ----
+
+    def cost_breakdown(self, cfg) -> List[Dict[str, Any]]:
+        """Analytic per-stage-op FLOPs / weight-bytes / activation-bytes.
+
+        The FLOP column is taken verbatim from
+        :func:`repro.models.pointmlp.pointmlp_flops_breakdown` (one
+        source of truth — the rows sum to exactly ``pointmlp_flops``);
+        the bytes columns are derived from the plan, so precision
+        overrides shrink weight bytes and a fused group->transfer
+        stage zeroes the grouped tensor's HBM round-trip.
+        """
+        # Deferred import: this package sits below the models in the
+        # import graph (mirrors the spec<->model-config bridge).
+        from repro.models.pointmlp import pointmlp_flops_breakdown
+        flops = pointmlp_flops_breakdown(cfg)
+        rows: List[Dict[str, Any]] = []
+
+        def wbytes(c_in: int, c_out: int, precision: str) -> int:
+            if precision == "int8":
+                return c_in * c_out + 4 * c_out      # int8 q + f32 scales
+            return 4 * c_in * c_out
+
+        def row(op: str, w_bytes: int, act_bytes: int) -> None:
+            rows.append({"op": op, "flops": flops[op],
+                         "w_bytes": w_bytes, "act_bytes": act_bytes})
+
+        n, e = cfg.n_points, cfg.embed_dim
+        row("embed", wbytes(3, e, self.precision), 4 * n * e)
+        c_prev = e
+        fused = {op.stage for op in self.ops
+                 if isinstance(op, FusedGroupTransferOp)}
+        for s in range(_N_STAGES):
+            smp, c = cfg.stage_samples[s], cfg.stage_dims[s]
+            k = cfg.k_neighbors
+            prec = self.stage_precision[s]
+            # The [S,k,2C] grouped tensor never materializes when the
+            # stage lowers fused, but the fused path's sigma stats pass
+            # still reads a [S,k,C] gather (all modes except "center"),
+            # so fusion halves — not zeroes — the group op's traffic.
+            if s not in fused:
+                group_bytes = 4 * smp * k * 2 * c_prev
+            elif cfg.affine_mode == "center":
+                group_bytes = 0
+            else:
+                group_bytes = 4 * smp * k * c_prev
+            row(f"stage{s + 1}.group", 0, group_bytes)
+            row(f"stage{s + 1}.transfer", wbytes(2 * c_prev, c, prec),
+                4 * smp * k * c)
+            mid = max(1, int(c * cfg.res_expansion))
+            blk = wbytes(c, mid, prec) + wbytes(mid, c, prec)
+            row(f"stage{s + 1}.pre", cfg.pre_blocks[s] * blk,
+                4 * smp * k * c)
+            row(f"stage{s + 1}.pos", cfg.pos_blocks[s] * blk, 4 * smp * c)
+            c_prev = c
+        row("head", wbytes(c_prev, 512, self.precision)
+            + wbytes(512, 256, self.precision)
+            + wbytes(256, cfg.n_classes, self.precision),
+            4 * (512 + 256 + cfg.n_classes))
+        return rows
+
+
+def _path_stage(path: tuple) -> Optional[int]:
+    """Stage index owning a param-tree key path (None = embed/head).
+
+    Accepts both jax key-path entries (DictKey/SequenceKey) and the
+    plain str/int paths the op IR stores.
+    """
+    first = getattr(path[0], "key", path[0])
+    if first == "stages" and len(path) > 1:
+        idx = getattr(path[1], "idx", path[1])
+        return int(idx) if isinstance(idx, int) else None
+    return None
+
+
+def param_at(params: Dict, path: Tuple[Any, ...]):
+    """Fetch the param subtree an op's ``path`` addresses."""
+    node = params
+    for p in path:
+        node = node[p]
+    return node
+
+
+# ----------------------------------------------------------- lowering ---
+
+def resolve_stage_fields(spec) -> Tuple[Tuple[str, ...], Tuple[str, ...]]:
+    """Resolve ``spec.stage_precision`` / ``stage_backend`` to full
+    4-tuples (inheriting the spec-level fields where unset), validating
+    values.  Spec ``__post_init__`` already checked shapes; this is the
+    lowering-time semantic resolution."""
+    prec = spec.stage_precision or (spec.precision,) * _N_STAGES
+    back = spec.stage_backend or (spec.backend,) * _N_STAGES
+    for s, b in enumerate(back):
+        registry.BACKENDS.get(b)     # KeyError lists registered names
+        if prec[s] == "int8" and b in _PALLAS_BACKENDS:
+            plan_warn(
+                f"stage {s + 1} backend {b!r} cannot lower int8 export "
+                f"trees; the stage falls back to the reference int8 "
+                f"matmul (set the stage backend to 'ref' to silence)",
+                stacklevel=4)
+    return tuple(prec), tuple(back)
+
+
+def _quant_for(spec, precision: str) -> Optional[QuantConfig]:
+    """The deployment QuantConfig one CBR op runs under (None = fp32)."""
+    if precision != "int8":
+        return None
+    return QuantConfig(w_bits=min(spec.w_bits, 8), a_bits=spec.a_bits,
+                       per_channel=spec.per_channel,
+                       symmetric=spec.symmetric, backend="int8_ref")
+
+
+def _build_ops(cfg, make_cbr: Callable, head_quant: Optional[QuantConfig],
+               fused_key: Optional[str] = None,
+               fused_fn: Optional[Callable] = None) -> Tuple[StageOp, ...]:
+    """The one op-sequence skeleton both lowerings share.
+
+    ``make_cbr(path, stage, act)`` is the only thing that differs
+    between the spec lowering (per-stage precision/backend resolution)
+    and the legacy config lowering (one uniform backend) — the
+    topology walk itself exists exactly once.
+    """
+    ops: List[StageOp] = [EmbedOp(make_cbr(("embed",), None, True))]
+    for s in range(_N_STAGES):
+        ops.append(SampleOp(stage=s, n_samples=cfg.stage_samples[s]))
+        transfer = make_cbr(("stages", s, "transfer"), s, True)
+        if fused_fn is not None:
+            ops.append(FusedGroupTransferOp(
+                stage=s, k=cfg.k_neighbors, cbr=transfer,
+                kernel=fused_key, fn=fused_fn))
+        else:
+            ops.append(GroupOp(stage=s, k=cfg.k_neighbors))
+            ops.append(transfer)
+        for branch, count in (("pre", cfg.pre_blocks[s]),
+                              ("pos", cfg.pos_blocks[s])):
+            for i in range(count):
+                base = ("stages", s, branch, i)
+                ops.append(ResBlockOp(
+                    stage=s, branch=branch, index=i,
+                    net1=make_cbr(base + ("net1",), s, True),
+                    net2=make_cbr(base + ("net2",), s, False)))
+            if branch == "pre":
+                ops.append(PoolOp(stage=s, axis=2))
+    ops.append(PoolOp(stage=None, axis=1))
+    ops.append(HeadOp(fc1=make_cbr(("head", "fc1"), None, True),
+                      fc2=make_cbr(("head", "fc2"), None, True),
+                      fc3_path=("head", "fc3"), fc3_quant=head_quant))
+    return tuple(ops)
+
+
+def lower(spec, cfg) -> StagePlan:
+    """Compile a spec + model config into the executable op plan.
+
+    ``cfg`` supplies the topology (stage samples/dims, block counts);
+    ``spec`` supplies the policy (per-stage precision/backend overrides,
+    the fused group->transfer path).  Called once per pipeline by
+    ``repro.api.build``; raises on invalid overrides, warns (escalated
+    in-tree) on soft misconfigurations.
+    """
+    stage_prec, stage_back = resolve_stage_fields(spec)
+    fused_key = getattr(spec, "fused_group", "none") or "none"
+    fused_fn = None
+    if fused_key != "none":
+        fused_fn = registry.FUSED_OPS.get(fused_key)
+        if spec.grouper != "knn":
+            raise ValueError(
+                f"fused_group={fused_key!r} builds its neighborhoods "
+                f"with the knn distance core; grouper={spec.grouper!r} "
+                f"cannot lower fused (use grouper='knn' or "
+                f"fused_group='none')")
+        bad = [s + 1 for s in range(_N_STAGES) if stage_prec[s] == "int8"]
+        if bad:
+            raise ValueError(
+                f"fused_group={fused_key!r} requires fp32 transfer "
+                f"layers; stages {bad} resolve to int8 "
+                f"(stage_precision / precision)")
+        if not spec.fuse:
+            raise ValueError(
+                f"fused_group={fused_key!r} consumes BN-folded (w, b) "
+                f"transfer layers; set spec.fuse=True")
+
+    def make_cbr(path, stage, act) -> CBROp:
+        precision = spec.precision if stage is None else stage_prec[stage]
+        backend = spec.backend if stage is None else stage_back[stage]
+        return CBROp(path=tuple(path), stage=stage, act=act,
+                     precision=precision, backend=backend,
+                     quant=_quant_for(spec, precision),
+                     fn=registry.BACKENDS.get(backend))
+
+    ops = _build_ops(cfg, make_cbr, _quant_for(spec, spec.precision),
+                     fused_key=fused_key if fused_fn is not None else None,
+                     fused_fn=fused_fn)
+    return StagePlan(name=spec.name, ops=ops,
+                     stage_precision=stage_prec, stage_backend=stage_back,
+                     precision=spec.precision, backend=spec.backend,
+                     fused_group=fused_key)
+
+
+def lower_config(cfg, backend_fn: Callable,
+                 backend_key: str = "<resolved>") -> StagePlan:
+    """Lower a legacy :class:`PointMLPConfig` + one resolved backend
+    callable into a uniform plan — the pre-spec entry points
+    (``pointmlp_infer`` / ``pointmlp_apply``) route through this, so
+    the interpreter is the single forward implementation.
+
+    Every CBR op gets ``backend_fn`` and the config's own quant policy
+    (enabled QAT configs keep fake-quant inference semantics exactly as
+    the monolithic walk did).
+    """
+    quant = cfg.quant if cfg.quant.enabled else None
+    precision = "int8" if quant is not None else "fp32"
+
+    def make_cbr(path, stage, act) -> CBROp:
+        return CBROp(path=tuple(path), stage=stage, act=act,
+                     precision=precision, backend=backend_key,
+                     quant=quant, fn=backend_fn)
+
+    return StagePlan(name=cfg.name,
+                     ops=_build_ops(cfg, make_cbr, quant),
+                     stage_precision=(precision,) * _N_STAGES,
+                     stage_backend=(backend_key,) * _N_STAGES,
+                     precision=precision, backend=backend_key)

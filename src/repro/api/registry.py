@@ -24,6 +24,13 @@ backend(p, x, quant, act) -> y
     — one Conv(+folded BN)(+ReLU) inference layer; ``p`` is a layer
     param dict (``w`` may be an int8 export dict), ``quant`` a
     QuantConfig or None, ``act`` whether to apply ReLU.
+fused-op(p, xyz, feats, idx, k, affine_params, mode, per_sample_norm,
+         act) -> (new_xyz [B,S,3], center_feats [B,S,C],
+                  out [B,S,k,C_out])
+    — a whole mapping+NN group executed as one kernel (the stage-plan
+    lowering of a ``GroupOp`` + transfer-``CBROp`` pair); ``p`` is the
+    transfer layer's fused fp32 param dict.  Named by
+    ``PipelineSpec.fused_group``.
 """
 from __future__ import annotations
 
@@ -74,10 +81,12 @@ class Registry:
 SAMPLERS = Registry("sampler")
 GROUPERS = Registry("grouper")
 BACKENDS = Registry("backend")
+FUSED_OPS = Registry("fused-op")
 
 register_sampler = SAMPLERS.register
 register_grouper = GROUPERS.register
 register_backend = BACKENDS.register
+register_fused_op = FUSED_OPS.register
 
 
 # ------------------------------------------------- builtin samplers -----
@@ -125,6 +134,42 @@ def _knn_grouper(xyz, feats, idx, k: int, affine_params, mode: str,
                                  per_sample_norm=per_sample_norm)
 
 
+#: Default ball-query radius for the builtin ``ball`` grouper entry.
+#: The synthetic clouds (``repro.data.pointclouds``) live on unit-scale
+#: surfaces, where 0.5 comfortably covers k<=16 neighbors in dense
+#: regions while still clipping far-side strays; register a custom
+#: radius with :func:`make_ball_grouper`.
+DEFAULT_BALL_RADIUS = 0.5
+
+
+def make_ball_grouper(radius: float):
+    """A grouper-contract callable doing ball query (radius + k cap).
+
+    Reuses the KNN distance core: the k nearest are extracted first,
+    then any of them outside ``radius`` is replaced by the nearest
+    in-ball neighbor (PointNet++ semantics — with ``radius=inf`` the
+    result is bit-identical to the ``knn`` entry).  Register under a
+    custom key for a non-default radius::
+
+        register_grouper("ball-0.2")(make_ball_grouper(0.2))
+    """
+    if not radius > 0:        # also rejects NaN; a sign-error radius
+        raise ValueError(     # must not masquerade as its absolute value
+            f"ball-query radius must be positive, got {radius!r}")
+
+    def ball_grouper(xyz, feats, idx, k: int, affine_params, mode: str,
+                     per_sample_norm: bool):
+        from repro.core import knn as knn_core
+        return knn_core.group_points(xyz, feats, idx, k, affine_params,
+                                     mode, per_sample_norm=per_sample_norm,
+                                     radius=radius)
+    ball_grouper.radius = radius
+    return ball_grouper
+
+
+GROUPERS.register("ball")(make_ball_grouper(DEFAULT_BALL_RADIUS))
+
+
 # ------------------------------------------------- builtin backends -----
 
 def _cbr_ref(p, x, quant, act: bool):
@@ -163,6 +208,25 @@ BACKENDS.register("pallas_interpret")(
     functools.partial(_cbr_fused_pallas, interpret=True))
 BACKENDS.register("pallas")(
     functools.partial(_cbr_fused_pallas, interpret=False))
+
+
+# ------------------------------------------------- builtin fused ops ----
+
+@register_fused_op("grouped_transfer")
+def _grouped_transfer(p, xyz, feats, idx, k: int, affine_params,
+                      mode: str, per_sample_norm: bool, act: bool = True):
+    """Fused gather + geometric-affine-normalize + matmul+bias+ReLU.
+
+    The stage-plan lowering of a ``GroupOp`` + transfer-``CBROp`` pair:
+    one Pallas kernel (``repro.kernels.grouped_transfer``, interpret
+    mode on CPU) gathers KNN neighborhoods, normalizes them, and runs
+    the transfer layer without the ``[B, S, k, 2C]`` grouped tensor
+    ever round-tripping through HBM.  Requires a fused fp32 transfer
+    layer (plan lowering enforces this).
+    """
+    from repro.kernels.grouped_transfer import fused_group_transfer
+    return fused_group_transfer(xyz, feats, idx, k, affine_params, mode,
+                                per_sample_norm, p, act=act)
 
 
 def resolve(sampler: str, grouper: str, backend: str

@@ -19,12 +19,13 @@ new registry entry named by a spec field — no new signatures.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 from repro.api import registry
 
 PRECISIONS = ("fp32", "int8")
 AFFINE_MODES = ("affine", "norm", "center")
+N_STAGES = 4
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,6 +75,18 @@ class PipelineSpec:
     per_channel: bool = True
     symmetric: bool = True
     fuse: bool = True
+    # ---- per-stage overrides (stage-plan lowering; None inherits the
+    # spec-level field for every stage).  A 4-tuple, one entry per
+    # stage: stage_precision=("int8","int8","int8","fp32") quantizes
+    # stages 1-3 only (the paper's per-layer quantization ladder as a
+    # spec field); stage_backend names a BACKENDS entry per stage.
+    # Embed and head always follow the spec-level precision/backend. ----
+    stage_precision: Optional[Tuple[str, ...]] = None
+    stage_backend: Optional[Tuple[str, ...]] = None
+    # ---- fused mapping path: "none", or a FUSED_OPS registry key
+    # (e.g. "grouped_transfer") lowering each GroupOp + transfer-CBROp
+    # pair to one gather+normalize+matmul+bias+ReLU kernel. ----
+    fused_group: str = "none"
     # ---- batch semantics ----
     shared_urs: bool = False
     per_sample_norm: bool = False
@@ -103,6 +116,25 @@ class PipelineSpec:
         if not isinstance(self.data_shards, int) or self.data_shards < 1:
             raise ValueError(f"data_shards must be a positive int, "
                              f"got {self.data_shards!r}")
+        for field, allowed in (("stage_precision", PRECISIONS),
+                               ("stage_backend", None)):
+            val = getattr(self, field)
+            if val is None:
+                continue
+            if isinstance(val, list):        # normalize to a hashable spec
+                val = tuple(val)
+                object.__setattr__(self, field, val)
+            if (not isinstance(val, tuple) or len(val) != N_STAGES
+                    or not all(isinstance(v, str) for v in val)):
+                raise ValueError(
+                    f"{field} must be a {N_STAGES}-tuple of strings "
+                    f"(one per stage), got {val!r}")
+            if allowed is not None and not set(val) <= set(allowed):
+                raise ValueError(
+                    f"{field} entries must be in {allowed}, got {val!r}")
+        if not isinstance(self.fused_group, str):
+            raise ValueError(f"fused_group must be a FUSED_OPS registry "
+                             f"key or 'none', got {self.fused_group!r}")
 
     def replace(self, **kw) -> "PipelineSpec":
         return dataclasses.replace(self, **kw)
@@ -143,6 +175,10 @@ class PipelineSpec:
         """Resolve every registry key (raises ``KeyError`` listing the
         registered names on a typo); returns self for chaining."""
         registry.resolve(self.sampler, self.grouper, self.backend)
+        for b in self.stage_backend or ():
+            registry.BACKENDS.get(b)
+        if self.fused_group != "none":
+            registry.FUSED_OPS.get(self.fused_group)
         # Deferred import: the policy registry lives serve-side, above
         # this package in the import graph.
         from repro.serve.policy import POLICIES

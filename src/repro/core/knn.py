@@ -57,6 +57,33 @@ def knn_batched(samples: jnp.ndarray, points: jnp.ndarray, k: int
     return jax.vmap(lambda s, p: knn(s, p, k))(samples, points)
 
 
+def ball_query(samples: jnp.ndarray, points: jnp.ndarray, k: int,
+               radius: float) -> jnp.ndarray:
+    """Ball query: neighbors within ``radius``, capped at the k nearest.
+
+    Reuses the KNN distance core: the k nearest are extracted with the
+    paper's selection trick, then any selected neighbor outside the
+    ball is replaced by the nearest one (PointNet++ fill semantics —
+    the nearest neighbor of a sampled centroid is itself, distance 0,
+    so the fill index is always in-ball).  ``radius=inf`` degenerates
+    to plain KNN bit-for-bit.
+
+    [S, C], [N, C] -> [S, k] int32.
+    """
+    d = pairwise_sqdist(samples, points)
+    idx = knn_select(d, k)                                   # ascending
+    sel = jnp.take_along_axis(d, idx, axis=1)                # [S, k]
+    in_ball = sel <= jnp.asarray(radius, d.dtype) ** 2
+    return jnp.where(in_ball, idx, idx[:, :1])
+
+
+def ball_query_batched(samples: jnp.ndarray, points: jnp.ndarray, k: int,
+                       radius: float) -> jnp.ndarray:
+    """[B, S, C], [B, N, C] -> [B, S, k]."""
+    return jax.vmap(lambda s, p: ball_query(s, p, k, radius))(samples,
+                                                              points)
+
+
 def gather_neighbors(feats: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
     """feats [B, N, C], idx [B, S, k] -> [B, S, k, C]."""
     b, s, k = idx.shape
@@ -113,7 +140,8 @@ def normalize_group(grouped: jnp.ndarray, centers: jnp.ndarray,
 def group_points(xyz: jnp.ndarray, feats: jnp.ndarray,
                  sample_idx: jnp.ndarray, k: int,
                  affine_params: Optional[dict], mode: str,
-                 per_sample_norm: bool = False
+                 per_sample_norm: bool = False,
+                 radius: Optional[float] = None
                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Full local-grouper: sample -> KNN -> gather -> normalize -> concat.
 
@@ -121,6 +149,9 @@ def group_points(xyz: jnp.ndarray, feats: jnp.ndarray,
       xyz:   [B, N, 3] coordinates.
       feats: [B, N, C] features.
       sample_idx: [B, S] centroid indices (from FPS or URS).
+      radius: None selects plain KNN; a float switches neighbor
+        selection to ball query (radius + k cap; the ``ball`` grouper
+        registry entry).
 
     Returns:
       new_xyz  [B, S, 3], centers' features [B, S, C],
@@ -129,7 +160,10 @@ def group_points(xyz: jnp.ndarray, feats: jnp.ndarray,
     """
     new_xyz = jnp.take_along_axis(xyz, sample_idx[..., None], axis=1)
     center_f = jnp.take_along_axis(feats, sample_idx[..., None], axis=1)
-    nbr_idx = knn_batched(new_xyz, xyz, k)                    # [B, S, k]
+    if radius is None:
+        nbr_idx = knn_batched(new_xyz, xyz, k)                # [B, S, k]
+    else:
+        nbr_idx = ball_query_batched(new_xyz, xyz, k, radius)
     grouped = gather_neighbors(feats, nbr_idx)                # [B, S, k, C]
     grouped = normalize_group(grouped, center_f, affine_params, mode,
                               per_sample=per_sample_norm)

@@ -1,0 +1,178 @@
+"""Fused group->normalize->transfer Pallas kernel (stage-plan fused path).
+
+The FPGA pipeline of HLS4PC streams a sample's gathered neighborhood
+straight through geometric-affine normalization into the transfer
+Conv->BN->ReLU MAC array — the ``[S, k, 2C]`` grouped tensor never
+exists in off-chip memory.  This kernel is the TPU rendering of that
+dataflow, extending ``fused_linear.py``'s epilogue pattern one level
+up the op graph: for a tile of samples it
+
+    1. gathers the k neighbor feature rows from VMEM,
+    2. subtracts the center, divides by the geometric-affine sigma and
+       applies alpha/beta,
+    3. concatenates the broadcast center features,
+    4. runs the transfer layer's matmul + bias + ReLU epilogue,
+
+all in one VMEM round-trip — the grouped tensor never round-trips
+through HBM between normalize and transfer.
+
+Two-pass structure: sigma is a *global* reduction over the cloud's
+local offsets (PointMLP's definition), so a cheap stats pass computes
+it first (reading ``[S, k, C]``, writing one scalar per cloud); the
+fused kernel then consumes it as a scalar operand.  On a real TPU the
+stats pass is the natural candidate for a second grid dimension with a
+scratch accumulator — tracked in ROADMAP (interpret mode on CPU is the
+correctness canary, exactly like ``fused_linear``).
+
+Exposed to pipelines as the ``grouped_transfer`` entry of
+``repro.api.registry.FUSED_OPS``, opted into with
+``PipelineSpec.fused_group="grouped_transfer"``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import knn as knn_core
+
+_EPS = 1e-5
+
+
+def _grouped_transfer_kernel(feats_ref, nidx_ref, cen_ref, sig_ref,
+                             alpha_ref, beta_ref, w_ref, b_ref, o_ref, *,
+                             k: int, normalize: bool, affine: bool,
+                             act: bool):
+    feats = feats_ref[:]                               # [N, C]
+    nidx = nidx_ref[:]                                 # [TS, k]
+    cen = cen_ref[:]                                   # [TS, C]
+    ts, c = cen.shape
+    nbr = jnp.take(feats, nidx.reshape(-1), axis=0).reshape(ts, k, c)
+    off = nbr - cen[:, None, :]
+    if normalize:
+        off = off / (sig_ref[0, 0] + _EPS)
+    if affine:
+        off = off * alpha_ref[0] + beta_ref[0]
+    cen_b = jnp.broadcast_to(cen[:, None, :], (ts, k, c))
+    x = jnp.concatenate([off, cen_b], axis=-1).reshape(ts * k, 2 * c)
+    y = jax.lax.dot(x, w_ref[:], preferred_element_type=jnp.float32)
+    y = y + b_ref[0].astype(jnp.float32)
+    if act:
+        y = jnp.maximum(y, 0.0)
+    o_ref[:] = y.reshape(ts, k, w_ref.shape[1]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "normalize", "affine",
+                                             "act", "tile_s", "interpret"))
+def grouped_transfer_pallas(feats: jnp.ndarray, nidx: jnp.ndarray,
+                            centers: jnp.ndarray, sigma: jnp.ndarray,
+                            alpha: jnp.ndarray, beta: jnp.ndarray,
+                            w: jnp.ndarray, b: jnp.ndarray, *, k: int,
+                            normalize: bool = True, affine: bool = True,
+                            act: bool = True, tile_s: int = 64,
+                            interpret: bool = True) -> jnp.ndarray:
+    """One cloud: feats [N,C], nidx [S,k], centers [S,C] -> [S,k,C_out].
+
+    ``sigma`` is the precomputed geometric-affine scale (scalar as
+    [1,1]); ``alpha``/``beta`` are [1,C] (pass ones/zeros for the
+    pruned ``norm`` mode — the multiply is skipped when
+    ``affine=False``).
+    """
+    s = nidx.shape[0]
+    c = feats.shape[1]
+    c_out = w.shape[1]
+    s_pad = -s % tile_s
+    nidx_p = jnp.pad(nidx, ((0, s_pad), (0, 0)))
+    cen_p = jnp.pad(centers, ((0, s_pad), (0, 0)))
+    grid = ((s + s_pad) // tile_s,)
+    out = pl.pallas_call(
+        functools.partial(_grouped_transfer_kernel, k=k,
+                          normalize=normalize, affine=affine, act=act),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(feats.shape, lambda i: (0, 0)),
+            pl.BlockSpec((tile_s, k), lambda i: (i, 0)),
+            pl.BlockSpec((tile_s, c), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, c), lambda i: (0, 0)),
+            pl.BlockSpec((1, c), lambda i: (0, 0)),
+            pl.BlockSpec(w.shape, lambda i: (0, 0)),
+            pl.BlockSpec((1, c_out), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_s, k, c_out), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((s + s_pad, k, c_out),
+                                       feats.dtype),
+        interpret=interpret,
+    )(feats, nidx_p, cen_p, sigma, alpha, beta, w, b)
+    return out[:s]
+
+
+def fused_group_transfer(xyz: jnp.ndarray, feats: jnp.ndarray,
+                         sample_idx: jnp.ndarray, k: int,
+                         affine_params: Optional[dict], mode: str,
+                         per_sample_norm: bool, p: dict, *,
+                         act: bool = True, interpret: bool = True):
+    """The FUSED_OPS-contract wrapper: a whole GroupOp + transfer-CBROp
+    pair as (stats pass + fused kernel), batched over clouds.
+
+    Args mirror the grouper contract (xyz [B,N,3], feats [B,N,C],
+    sample_idx [B,S]) plus the transfer layer's fused fp32 params
+    ``p = {"w": [2C, C_out], "b": [C_out]}``.
+
+    Returns: (new_xyz [B,S,3], center feats [B,S,C], out [B,S,k,C_out])
+    — the same triple the unfused GroupOp+CBROp sequence produces,
+    with the transfer activation already applied.
+    """
+    w = p["w"]
+    if isinstance(w, dict) or getattr(w, "ndim", 0) != 2 or "bn" in p:
+        raise ValueError(
+            "fused_group_transfer needs a fused fp32 transfer layer "
+            "(2-D w, BN folded, no int8 export dict); lower this stage "
+            "unfused instead")
+    c = feats.shape[-1]
+    bias = p.get("b")
+    if bias is None:
+        bias = jnp.zeros((w.shape[1],), w.dtype)
+    new_xyz = jnp.take_along_axis(xyz, sample_idx[..., None], axis=1)
+    center_f = jnp.take_along_axis(feats, sample_idx[..., None], axis=1)
+    nbr_idx = knn_core.knn_batched(new_xyz, xyz, k)          # [B, S, k]
+
+    normalize = mode != "center"
+    affine = mode == "affine"
+    if affine:
+        if affine_params is None:
+            raise ValueError("affine mode needs alpha/beta params for "
+                             "the fused group->transfer stage")
+        alpha = affine_params["alpha"][None, :]
+        beta = affine_params["beta"][None, :]
+    else:
+        alpha = jnp.ones((1, c), feats.dtype)
+        beta = jnp.zeros((1, c), feats.dtype)
+
+    # Stats pass: sigma exactly as repro.core.knn.normalize_group
+    # computes it — std of the local offsets, per cloud under
+    # per-sample (serving) semantics, over the whole batch otherwise.
+    if normalize:
+        gathered = knn_core.gather_neighbors(feats, nbr_idx)
+        off = gathered - center_f[:, :, None, :]
+        red = (1, 2, 3) if per_sample_norm else None
+        sigma = jnp.sqrt(jnp.mean(off * off, axis=red, keepdims=False)
+                         + _EPS)
+        sigma = (sigma.reshape(-1, 1, 1) if per_sample_norm
+                 else jnp.broadcast_to(sigma, (feats.shape[0],)
+                                       ).reshape(-1, 1, 1))
+    else:
+        sigma = jnp.ones((feats.shape[0], 1, 1), feats.dtype)
+
+    def one_cloud(args):
+        f, ni, cen, sig = args
+        return grouped_transfer_pallas(
+            f, ni, cen, sig, alpha, beta, w, bias[None, :], k=k,
+            normalize=normalize, affine=affine, act=act,
+            interpret=interpret)
+
+    out = jax.lax.map(one_cloud, (feats, nbr_idx, center_f, sigma))
+    return new_xyz, center_f, out

@@ -22,6 +22,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.api import plan as stage_plan
 from repro.api import registry as api_registry
 from repro.core import knn as knn_core
 from repro.core.quant import QuantConfig
@@ -157,23 +158,22 @@ def _cbr_apply(p: Dict, x: jnp.ndarray, cfg: PointMLPConfig, train: bool,
     return y, p_new
 
 
-def _forward(params: Dict, cfg: PointMLPConfig, xyz: jnp.ndarray,
-             lfsr_state: Optional[jnp.ndarray], train: bool, *,
-             sampler, grouper, backend,
-             shared_urs: bool = False, per_sample_norm: bool = False
-             ) -> Tuple[jnp.ndarray, Dict, Optional[jnp.ndarray]]:
-    """Shared topology walk over *resolved* pipeline components.
+def _forward_reference(params: Dict, cfg: PointMLPConfig, xyz: jnp.ndarray,
+                       lfsr_state: Optional[jnp.ndarray], train: bool, *,
+                       sampler, grouper, backend,
+                       shared_urs: bool = False,
+                       per_sample_norm: bool = False
+                       ) -> Tuple[jnp.ndarray, Dict, Optional[jnp.ndarray]]:
+    """The pre-IR monolithic topology walk — retained as the golden
+    oracle for the stage-plan interpreter.
 
-    ``sampler`` / ``grouper`` / ``backend`` are callables resolved from
-    ``repro.api.registry`` (the walk never string-dispatches): the
-    sampler picks stage centroids, the grouper builds normalized local
-    neighborhoods, and the backend lowers each inference CBR layer
-    (reference jnp, fused-Pallas interpret, or real Pallas).  ``train``
-    selects the stat-threading CBR (functional BN updates; the backend
-    is bypassed — training always runs the reference lowering) vs the
-    backend-lowered inference CBR; the walk itself — embed →
-    4×(sample, group, transfer, pre, pool, pos) → head — is written
-    once for both.
+    This is the hand-written op sequence :func:`_forward` used to be
+    before the plan refactor; ``tests/test_stage_plan.py`` asserts the
+    interpreter is *bit-identical* to it for every spec, so the IR
+    refactor stays observationally invisible until a per-stage override
+    or the fused grouped-transfer path is opted into.  Production code
+    never calls this; do not add features here — add lowering rules in
+    ``repro.api.plan`` instead.
     """
     quant = cfg.quant if cfg.quant.enabled else None
     if train:
@@ -226,20 +226,106 @@ def _forward(params: Dict, cfg: PointMLPConfig, xyz: jnp.ndarray,
     return logits, new_params, lfsr_state
 
 
+def _forward(params: Dict, cfg: PointMLPConfig, xyz: jnp.ndarray,
+             lfsr_state: Optional[jnp.ndarray], train: bool, *,
+             sampler, grouper, backend,
+             shared_urs: bool = False, per_sample_norm: bool = False,
+             plan=None
+             ) -> Tuple[jnp.ndarray, Dict, Optional[jnp.ndarray]]:
+    """Thin interpreter over a compiled :class:`repro.api.plan.StagePlan`.
+
+    The forward walk is *data*: ``repro.api.build`` lowers a
+    PipelineSpec once (per-stage precision/backend overrides, fused
+    group->transfer path) and passes the plan in; the legacy entry
+    points pass ``plan=None`` and a uniform plan is lowered on the fly
+    from ``cfg`` + the one resolved ``backend`` callable — bit-identical
+    to the pre-IR monolithic walk (:func:`_forward_reference`, retained
+    as the golden oracle).
+
+    ``sampler`` / ``grouper`` are environment-level callables (resolved
+    once by the caller); each CBR op carries its own resolved backend
+    ``fn`` and deployment QuantConfig.  ``train`` preserves BN-stat
+    threading: every CBR runs the stat-refreshing reference lowering
+    (``_cbr_apply``) and the per-op backends are bypassed, exactly as
+    before — the interpreter is written once for train and infer.
+    """
+    if plan is None:
+        plan = stage_plan.lower_config(cfg, backend)
+
+    def run_cbr(op, p, x):
+        if train:
+            return _cbr_apply(p, x, cfg, True, op.act)
+        return op.fn(p, x, op.quant, op.act), p
+
+    new_params = {k: v for k, v in params.items()}
+    new_stages = [dict(st) for st in params["stages"]]
+    for st in new_stages:
+        st["pre"], st["pos"] = [], []
+    cur_xyz, cur, idx = xyz, None, None
+    logits = None
+    for op in plan.ops:
+        if isinstance(op, stage_plan.EmbedOp):
+            cur, new_params["embed"] = run_cbr(op.cbr, params["embed"], xyz)
+        elif isinstance(op, stage_plan.SampleOp):
+            idx, lfsr_state = sampler(cur_xyz, op.n_samples, lfsr_state,
+                                      shared_urs)
+        elif isinstance(op, stage_plan.GroupOp):
+            affine = params["stages"][op.stage].get("affine")
+            cur_xyz, _, cur = grouper(cur_xyz, cur, idx, op.k, affine,
+                                      cfg.affine_mode, per_sample_norm)
+        elif isinstance(op, stage_plan.CBROp):
+            # Bare CBR ops are stage transfers (embed/head CBRs ride
+            # inside their wrapper ops).
+            p = stage_plan.param_at(params, op.path)
+            cur, new_stages[op.stage]["transfer"] = run_cbr(op, p, cur)
+        elif isinstance(op, stage_plan.FusedGroupTransferOp):
+            if train:
+                raise ValueError(
+                    "fused group->transfer ops are inference-only; "
+                    "train with fused_group='none'")
+            affine = params["stages"][op.stage].get("affine")
+            p = stage_plan.param_at(params, op.cbr.path)
+            cur_xyz, _, cur = op.fn(p, cur_xyz, cur, idx, op.k, affine,
+                                    cfg.affine_mode, per_sample_norm,
+                                    act=op.cbr.act)
+        elif isinstance(op, stage_plan.ResBlockOp):
+            blk = params["stages"][op.stage][op.branch][op.index]
+            h, n1 = run_cbr(op.net1, blk["net1"], cur)
+            h, n2 = run_cbr(op.net2, blk["net2"], h)
+            cur = jax.nn.relu(h + cur)
+            new_stages[op.stage][op.branch].append({"net1": n1, "net2": n2})
+        elif isinstance(op, stage_plan.PoolOp):
+            cur = jnp.max(cur, axis=op.axis)
+        elif isinstance(op, stage_plan.HeadOp):
+            head = params["head"]
+            h, f1 = run_cbr(op.fc1, head["fc1"], cur)
+            h, f2 = run_cbr(op.fc2, head["fc2"], h)
+            fc3_quant = ((cfg.quant if cfg.quant.enabled else None)
+                         if train else op.fc3_quant)
+            logits = L.conv1d_apply(head["fc3"], h, quant=fc3_quant)
+            new_params["head"] = {"fc1": f1, "fc2": f2, "fc3": head["fc3"]}
+        else:
+            raise TypeError(f"unknown stage-plan op {type(op).__name__}")
+    new_params["stages"] = new_stages
+    return logits, new_params, lfsr_state
+
+
 def pointmlp_infer_with(params: Dict, cfg: PointMLPConfig,
                         xyz: jnp.ndarray,
                         lfsr_state: Optional[jnp.ndarray] = None, *,
                         sampler, grouper, backend,
                         shared_urs: bool = False,
-                        per_sample_norm: bool = False
+                        per_sample_norm: bool = False,
+                        plan=None
                         ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
     """Inference forward over resolved pipeline components.
 
     The spec-era hot path: ``repro.api.build`` resolves a
-    :class:`~repro.api.spec.PipelineSpec`'s registry keys once and jits
-    this entry.  No BN-stat threading and no new-params return — with
-    fused params every CBR is a single matmul+bias+ReLU lowered by
-    ``backend``.
+    :class:`~repro.api.spec.PipelineSpec`'s registry keys, lowers the
+    stage plan once (``plan``; None lowers a uniform plan from ``cfg``)
+    and jits this entry.  No BN-stat threading and no new-params return
+    — with fused params every CBR is a single matmul+bias+ReLU lowered
+    by its op's backend.
 
     Under full serving semantics (``shared_urs`` *and*
     ``per_sample_norm``) lanes are mathematically independent — one
@@ -260,12 +346,14 @@ def pointmlp_infer_with(params: Dict, cfg: PointMLPConfig,
 
     Returns: (logits [B, n_classes], advanced lfsr state).
     """
+    if plan is None:
+        plan = stage_plan.lower_config(cfg, backend)
     if shared_urs and per_sample_norm:
         def lane(cloud):
             logits, _, state = _forward(
                 params, cfg, cloud[None], lfsr_state, train=False,
                 sampler=sampler, grouper=grouper, backend=backend,
-                shared_urs=True, per_sample_norm=True)
+                shared_urs=True, per_sample_norm=True, plan=plan)
             return logits[0], state
 
         logits, states = jax.lax.map(lane, xyz)
@@ -277,7 +365,8 @@ def pointmlp_infer_with(params: Dict, cfg: PointMLPConfig,
                                      train=False, sampler=sampler,
                                      grouper=grouper, backend=backend,
                                      shared_urs=shared_urs,
-                                     per_sample_norm=per_sample_norm)
+                                     per_sample_norm=per_sample_norm,
+                                     plan=plan)
     return logits, lfsr_state
 
 
@@ -336,21 +425,34 @@ def pointmlp_apply(params: Dict, cfg: PointMLPConfig, xyz: jnp.ndarray,
                     sampler=sampler, grouper=grouper, backend=backend)
 
 
-def pointmlp_flops(cfg: PointMLPConfig) -> int:
-    """Analytic MAC*2 count per sample (for GOPS derivations, Table 2/3)."""
-    fl = 0
+def pointmlp_flops_breakdown(cfg: PointMLPConfig) -> Dict[str, int]:
+    """Analytic MAC*2 count per sample, itemized per stage op.
+
+    Keys follow the stage-plan op naming (``embed``,
+    ``stage<i>.{group,transfer,pre,pos}``, ``head``); the values sum to
+    exactly :func:`pointmlp_flops` — same arithmetic, one accumulator
+    per op instead of one total.
+    """
+    fl: Dict[str, int] = {}
     n = cfg.n_points
-    fl += 2 * n * 3 * cfg.embed_dim
+    fl["embed"] = 2 * n * 3 * cfg.embed_dim
     c_prev = cfg.embed_dim
     for s in range(4):
         smp, c = cfg.stage_samples[s], cfg.stage_dims[s]
         k = cfg.k_neighbors
         # knn distances: S x N x C MACs
-        fl += 2 * smp * n * 3
-        fl += 2 * smp * k * (2 * c_prev) * c                 # transfer
+        fl[f"stage{s + 1}.group"] = 2 * smp * n * 3
+        fl[f"stage{s + 1}.transfer"] = 2 * smp * k * (2 * c_prev) * c
         mid = max(1, int(c * cfg.res_expansion))
-        fl += cfg.pre_blocks[s] * 2 * smp * k * (c * mid + mid * c)
-        fl += cfg.pos_blocks[s] * 2 * smp * (c * mid + mid * c)
+        fl[f"stage{s + 1}.pre"] = (cfg.pre_blocks[s] * 2 * smp * k
+                                   * (c * mid + mid * c))
+        fl[f"stage{s + 1}.pos"] = (cfg.pos_blocks[s] * 2 * smp
+                                   * (c * mid + mid * c))
         n, c_prev = smp, c
-    fl += 2 * (c_prev * 512 + 512 * 256 + 256 * cfg.n_classes)
-    return int(fl)
+    fl["head"] = 2 * (c_prev * 512 + 512 * 256 + 256 * cfg.n_classes)
+    return {op: int(v) for op, v in fl.items()}
+
+
+def pointmlp_flops(cfg: PointMLPConfig) -> int:
+    """Analytic MAC*2 count per sample (for GOPS derivations, Table 2/3)."""
+    return sum(pointmlp_flops_breakdown(cfg).values())

@@ -302,6 +302,21 @@ class AsyncPointCloudEngine:
         self.stats.reset()
         self.latencies_ms.clear()
 
+    def calibrate_policy(self) -> bool:
+        """Feed the current stats window to a calibratable policy
+        (``POLICIES["cost"]``): the ``stats.serve_s / stats.batches``
+        per-dispatch average at this engine's ``max_batch``, divided by
+        ``spec.data_shards``, becomes the policy's dispatch-size-aware
+        service estimate.  Returns True when the policy accepted a
+        calibration (False for fixed-model policies or an empty
+        window)."""
+        calibrate = getattr(self.policy, "calibrate", None)
+        if calibrate is None or self.stats.batches == 0:
+            return False
+        calibrate(self.stats, self.max_batch,
+                  data_shards=self.spec.data_shards)
+        return True
+
     def warmup(self) -> float:
         """Compile the one ``(max_batch, n_points)`` executable ahead of
         traffic (no queue interaction, no LFSR consumption — dispatches

@@ -129,6 +129,98 @@ class DeadlineBatch(BatchPolicy):
                 f"dispatch_ms={self.dispatch_ms:g})")
 
 
+@register_policy("cost")
+class CostModelBatch(BatchPolicy):
+    """Deadline batching with a *calibrated, dispatch-size-aware*
+    service estimate instead of a fixed ``dispatch_ms`` reservation.
+
+    ``DeadlineBatch`` reserves one constant ``dispatch_ms`` out of the
+    SLO budget regardless of how many requests it is about to
+    dispatch.  Under the lane-mapped serving walk the service time of
+    a dispatch is ~linear in its *per-device* lane count
+    (``ceil(n / data_shards)``), so a partial dispatch is cheaper than
+    a full one — budget a full-batch reservation against a 2-request
+    dispatch and you dispatch earlier than the SLO required, padding
+    more than necessary.
+
+    :meth:`calibrate` fits the model from a measurement window: the
+    per-dispatch average ``stats.serve_s / stats.batches`` — taken at
+    the engine's ``max_batch`` — divided by ``spec.data_shards`` (the
+    PR-4 sharded dispatch spreads the lanes over that many devices),
+    giving a per-lane cost that :meth:`estimate_ms` scales to any
+    dispatch size.  ``AsyncPointCloudEngine.calibrate_policy()`` feeds
+    it the live stats.  Until calibrated, the policy degrades to
+    exactly ``DeadlineBatch`` semantics using the spec-plumbed
+    ``dispatch_ms`` as a flat reservation.
+
+    Determinism contract: ``decide`` stays a pure function of its
+    arguments *and* the explicitly-scripted calibration state — no
+    wall-clock reads — so the virtual-clock harness can drive it.
+    """
+
+    def __init__(self, slo_ms: float = 50.0, dispatch_ms: float = 0.0):
+        super().__init__(slo_ms, dispatch_ms)
+        self._ms_per_lane: float | None = None
+        self._data_shards: int = 1
+        # Until calibrated the flat dispatch_ms reservation applies, so
+        # the same collapse DeadlineBatch warns about applies too.
+        if self.slo_ms > 0 and self.dispatch_ms >= self.slo_ms:
+            warnings.warn(
+                f"CostModelBatch: uncalibrated dispatch_ms="
+                f"{self.dispatch_ms:g} consumes the whole slo_ms="
+                f"{self.slo_ms:g} budget — until calibrate() runs, the "
+                f"policy collapses into dispatch-on-arrival",
+                stacklevel=3)
+
+    def calibrate(self, stats, max_batch: int,
+                  data_shards: int = 1) -> "CostModelBatch":
+        """Fit the service model from a serving-stats window.
+
+        Args:
+          stats: a :class:`~repro.serve.batching.PointCloudStats` whose
+            ``serve_s`` / ``batches`` cover dispatches of ``max_batch``.
+          max_batch: the dispatch shape the window was measured at.
+          data_shards: the spec's device split — the measured
+            per-dispatch time divided by it gives the unsharded lane
+            cost (and ``estimate_ms`` re-applies the split).
+        Returns self (chaining); a window with no dispatches is a
+        no-op.
+        """
+        if getattr(stats, "batches", 0) > 0:
+            per_dispatch_ms = stats.serve_s / stats.batches * 1e3
+            shards = max(1, int(data_shards))
+            lanes = max(1, max_batch // shards)
+            self._ms_per_lane = per_dispatch_ms / shards / lanes
+            self._data_shards = shards
+        return self
+
+    @property
+    def calibrated(self) -> bool:
+        return self._ms_per_lane is not None
+
+    def estimate_ms(self, n: int) -> float:
+        """Estimated service time of an ``n``-request dispatch."""
+        if self._ms_per_lane is None:
+            return self.dispatch_ms
+        lanes = -(-max(1, n) // self._data_shards)       # ceil
+        return self._ms_per_lane * lanes * self._data_shards
+
+    def decide(self, depth: int, oldest_wait_ms: float,
+               max_batch: int) -> int:
+        if depth >= max_batch:
+            return max_batch
+        budget_ms = max(0.0, self.slo_ms - self.estimate_ms(depth))
+        if depth and oldest_wait_ms >= budget_ms:
+            return depth
+        return 0
+
+    def describe(self) -> str:
+        est = (f"ms_per_lane={self._ms_per_lane:.3f} "
+               f"x{self._data_shards} shards" if self.calibrated
+               else f"uncalibrated, flat dispatch_ms={self.dispatch_ms:g}")
+        return f"CostModelBatch(slo_ms={self.slo_ms:g}, {est})"
+
+
 def make_policy(name_or_policy, slo_ms: float = 0.0,
                 dispatch_ms: float = 0.0) -> BatchPolicy:
     """Resolve a policy: pass instances through, build registry entries.
