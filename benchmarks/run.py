@@ -4,12 +4,20 @@ Prints ``name,us_per_call,derived`` CSV rows.  Heavier rows (Table 1 /
 Fig. 4 miniature training) run by default; ``--quick`` skips them.
 Roofline rows are summarized from the dry-run artifacts when present
 (run ``python -m repro.launch.dryrun`` first).
+
+``--json PATH`` additionally writes every emitted row as a
+schema-versioned ``BENCH_<rev>.json`` artifact (``repro.tune.artifact``
+— the same row schema the autotuner emits), so humans read the CSV and
+the CI regression gate (``scripts/bench_diff.py``) consumes the same
+run.  ``--tune-quick`` replaces the table sweep with the roofline-guided
+spec autotuner (``repro.tune``) over a CI-sized search space.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import pathlib
+import re
 import sys
 import time
 
@@ -20,9 +28,23 @@ for _mod, _p in (("repro", _ROOT / "src"), ("benchmarks", _ROOT)):
     except ImportError:
         sys.path.insert(0, str(_p))
 
+#: Artifact rows collected by ``_emit`` for ``--json`` (shared schema
+#: with the tuner: ``repro.tune.artifact.new_row``).
+_ROWS: list = []
+
+_SPS_RE = re.compile(r"(?:^|;)SPS=([0-9.eE+-]+)")
+_ERR_RE = re.compile(r"(?:^|;)err_vs_fp32=([0-9.eE+-]+)")
+
 
 def _emit(name: str, us: float, derived: str) -> None:
     print(f"{name},{us:.1f},{derived}", flush=True)
+    from repro.tune import artifact as art
+    sps = _SPS_RE.search(derived)
+    err = _ERR_RE.search(derived)
+    _ROWS.append(art.new_row(
+        name, us_per_call=us, derived=derived,
+        measured_sps=float(sps.group(1)) if sps else None,
+        err_vs_fp32=float(err.group(1)) if err else None))
 
 
 def bench_kernels() -> None:
@@ -264,6 +286,51 @@ def bench_serve_pointcloud(quick: bool) -> None:
         _emit(name, us, derived.replace(",", ";"))
 
 
+def bench_tune_quick() -> None:
+    """The roofline-guided spec autotuner, CI-sized (``--tune-quick``).
+
+    Runs ``repro.tune.tune`` over the quick search space of a tiny
+    serving spec (the same 128-point miniature the ``spec_*`` rows
+    use): every candidate is scored statically from its stage plan's
+    cost breakdown through the roofline hardware model, the top-K
+    estimates plus the fp32-ref anchor get real measurements, and the
+    rows — estimated vs measured SPS, err-vs-fp32, frontier flags —
+    land in the CSV *and* the ``--json`` artifact (they are already
+    artifact rows).
+    """
+    from repro.api import lite_spec
+    from repro.data import pointclouds
+    from repro.tune import tune
+
+    base = lite_spec(pointclouds.N_CLASSES).replace(
+        n_points=128, embed_dim=16, k_neighbors=8, precision="fp32")
+    t0 = time.time()
+    doc = tune(base, top_k=3, seed=0)
+    us = (time.time() - t0) * 1e6
+    measured = [r for r in doc["rows"] if r["measured_sps"] is not None]
+    front = [r for r in doc["rows"] if r["frontier"]]
+    _emit("tune_quick", us,
+          f"candidates={len(doc['rows'])};measured={len(measured)};"
+          f"frontier={len(front)};rev={doc['rev']}")
+    # The tuner rows are artifact rows already — merge them verbatim
+    # (dropping the odd duplicate if a quick row reused a name).
+    seen = {r["name"] for r in _ROWS}
+    for row in doc["rows"]:
+        tag = ("anchor" if row["anchor"]
+               else "frontier" if row["frontier"]
+               else "measured" if row["measured_sps"] is not None
+               else "est")
+        est = (f"{row['estimated_sps']:.1f}"
+               if row["estimated_sps"] is not None else "-")
+        line = f"tune[{tag}] {row['name']}: est_sps={est}"
+        if row["measured_sps"] is not None:
+            line += (f" measured_sps={row['measured_sps']:.1f}"
+                     f" err_vs_fp32={row['err_vs_fp32']:.5f}")
+        print(line, flush=True)
+        if row["name"] not in seen:
+            _ROWS.append(row)
+
+
 def bench_roofline_summary(dryrun_dir: str = "artifacts/dryrun/pod") -> None:
     d = pathlib.Path(dryrun_dir)
     if not d.exists():
@@ -282,15 +349,34 @@ def bench_roofline_summary(dryrun_dir: str = "artifacts/dryrun/pod") -> None:
               if frac else f"bound={r['bottleneck']}")
 
 
+def _write_json(path: str) -> None:
+    from repro.tune import artifact as art
+    out = art.write_artifact(path, art.new_artifact(
+        _ROWS, source="benchmarks/run.py"))
+    print(f"wrote {out} ({len(_ROWS)} rows, schema {art.SCHEMA})",
+          flush=True)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="skip the training-based tables")
+    ap.add_argument("--tune-quick", action="store_true",
+                    help="run only the roofline-guided spec autotuner "
+                         "(CI-sized search space)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the rows as a schema-versioned "
+                         "BENCH_<rev>.json artifact (repro.tune.artifact)")
     ap.add_argument("--table1-steps", type=int, default=120)
     ap.add_argument("--fig4-steps", type=int, default=100)
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
+    if args.tune_quick:
+        bench_tune_quick()
+        if args.json:
+            _write_json(args.json)
+        return
     bench_kernels()
     bench_table2()
     bench_table3()
@@ -303,6 +389,8 @@ def main() -> None:
         bench_table1(args.table1_steps)
         bench_fig4(args.fig4_steps, max(30, args.fig4_steps // 2))
     bench_roofline_summary()
+    if args.json:
+        _write_json(args.json)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,145 @@
+#!/usr/bin/env python
+"""Diff two ``BENCH_<rev>.json`` perf artifacts (the CI regression gate).
+
+    python scripts/bench_diff.py BASELINE.json NEW.json \
+        [--sps-tol 0.25] [--err-tol 0.05]
+
+Matches rows by name, prints a table of measured SPS / err-vs-fp32
+deltas, and exits non-zero when any tracked row *regresses*: measured
+SPS drops by more than ``--sps-tol`` (fraction of the baseline) or
+err-vs-fp32 worsens by more than ``--err-tol`` (absolute).  Rows that
+exist on only one side are reported but never fail the gate (specs come
+and go as the search space evolves); estimate-only rows (no measured
+SPS) are skipped.  A malformed or old-schema artifact exits 2 with the
+validator's message.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+from typing import Any, Dict, List, Optional, Tuple
+
+_ROOT = pathlib.Path(__file__).resolve().parents[1]
+try:
+    import repro  # noqa: F401
+except ImportError:
+    sys.path.insert(0, str(_ROOT / "src"))
+
+from repro.tune.artifact import ArtifactError, read_artifact  # noqa: E402
+
+DEFAULT_SPS_TOL = 0.25
+DEFAULT_ERR_TOL = 0.05
+
+
+def _fmt(v: Optional[float], unit: str = "") -> str:
+    if v is None:
+        return "-"
+    return f"{v:.5g}{unit}"
+
+
+def diff_rows(old: Dict[str, Any], new: Dict[str, Any],
+              *, sps_tol: float = DEFAULT_SPS_TOL,
+              err_tol: float = DEFAULT_ERR_TOL
+              ) -> Tuple[List[Dict[str, Any]], List[str]]:
+    """Compare two validated artifact docs.
+
+    Returns (table rows, regression messages).  One table row per name
+    across both docs: ``status`` is ``ok`` / ``REGRESSION`` /
+    ``new`` / ``gone`` / ``unmeasured``.
+    """
+    old_by = {r["name"]: r for r in old["rows"]}
+    new_by = {r["name"]: r for r in new["rows"]}
+    names = list(old_by) + [n for n in new_by if n not in old_by]
+    table: List[Dict[str, Any]] = []
+    regressions: List[str] = []
+    for name in names:
+        o, n = old_by.get(name), new_by.get(name)
+        row = {"name": name,
+               "old_sps": o.get("measured_sps") if o else None,
+               "new_sps": n.get("measured_sps") if n else None,
+               "old_err": o.get("err_vs_fp32") if o else None,
+               "new_err": n.get("err_vs_fp32") if n else None,
+               "delta_sps_pct": None, "status": "ok"}
+        if o is None:
+            row["status"] = "new"
+        elif n is None:
+            row["status"] = "gone"
+        elif row["old_sps"] is None or row["new_sps"] is None:
+            row["status"] = "unmeasured"
+        else:
+            if row["old_sps"] > 0:
+                row["delta_sps_pct"] = (100.0 * (row["new_sps"]
+                                        - row["old_sps"]) / row["old_sps"])
+                if row["new_sps"] < row["old_sps"] * (1.0 - sps_tol):
+                    row["status"] = "REGRESSION"
+                    regressions.append(
+                        f"{name}: measured SPS {row['old_sps']:.1f} -> "
+                        f"{row['new_sps']:.1f} "
+                        f"({row['delta_sps_pct']:+.1f}%, tolerance "
+                        f"-{sps_tol * 100:.0f}%)")
+            if (row["old_err"] is not None and row["new_err"] is not None
+                    and row["new_err"] > row["old_err"] + err_tol):
+                row["status"] = "REGRESSION"
+                regressions.append(
+                    f"{name}: err_vs_fp32 {row['old_err']:.5g} -> "
+                    f"{row['new_err']:.5g} (worsened by "
+                    f"{row['new_err'] - row['old_err']:.5g}, tolerance "
+                    f"+{err_tol:g})")
+        table.append(row)
+    return table, regressions
+
+
+def print_table(table: List[Dict[str, Any]], *, file=sys.stdout) -> None:
+    cols = ("name", "old SPS", "new SPS", "dSPS%", "old err", "new err",
+            "status")
+    lines = [[r["name"], _fmt(r["old_sps"]), _fmt(r["new_sps"]),
+              _fmt(r["delta_sps_pct"]), _fmt(r["old_err"]),
+              _fmt(r["new_err"]), r["status"]] for r in table]
+    widths = [max(len(c), *(len(ln[i]) for ln in lines)) if lines
+              else len(c) for i, c in enumerate(cols)]
+    def emit(cells):
+        print("  ".join(c.ljust(w) for c, w in zip(cells, widths)),
+              file=file)
+    emit(cols)
+    emit(["-" * w for w in widths])
+    for ln in lines:
+        emit(ln)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", help="baseline BENCH_*.json (e.g. main)")
+    ap.add_argument("new", help="candidate BENCH_*.json (this branch)")
+    ap.add_argument("--sps-tol", type=float, default=DEFAULT_SPS_TOL,
+                    help="allowed fractional SPS drop per row "
+                         "(default %(default)s)")
+    ap.add_argument("--err-tol", type=float, default=DEFAULT_ERR_TOL,
+                    help="allowed absolute err_vs_fp32 worsening per row "
+                         "(default %(default)s)")
+    args = ap.parse_args(argv)
+
+    try:
+        old = read_artifact(args.baseline)
+        new = read_artifact(args.new)
+    except ArtifactError as e:
+        print(f"bench_diff: {e}", file=sys.stderr)
+        return 2
+
+    print(f"baseline: {args.baseline} (rev {old['rev']})")
+    print(f"new     : {args.new} (rev {new['rev']})")
+    table, regressions = diff_rows(old, new, sps_tol=args.sps_tol,
+                                   err_tol=args.err_tol)
+    print_table(table)
+    if regressions:
+        print(f"\n{len(regressions)} regression(s) beyond tolerance:")
+        for msg in regressions:
+            print(f"  {msg}")
+        return 1
+    print("\nzero regressions (tolerances: "
+          f"SPS -{args.sps_tol * 100:.0f}%, err +{args.err_tol:g})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

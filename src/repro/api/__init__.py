@@ -20,7 +20,8 @@ from __future__ import annotations
 
 from repro.api.build import FrozenPipeline, build
 from repro.api.compat import config_to_spec, spec_to_config
-from repro.api.plan import StagePlan, lower
+from repro.api.plan import (StagePlan, enumerate_plan_space, lower,
+                            spec_fingerprint, spec_label)
 from repro.api.registry import (BACKENDS, FUSED_OPS, GROUPERS, SAMPLERS,
                                 Registry, make_ball_grouper,
                                 register_backend, register_fused_op,
@@ -32,7 +33,8 @@ __all__ = [
     "BACKENDS", "FUSED_OPS", "FrozenPipeline", "GROUPERS", "PipelineSpec",
     "Registry", "SAMPLERS", "StagePlan", "build",
     "compression_ladder_specs", "config_to_spec", "elite_spec",
-    "lite_spec", "lower", "m2_spec", "make_ball_grouper",
-    "register_backend", "register_fused_op", "register_grouper",
-    "register_sampler", "spec_to_config",
+    "enumerate_plan_space", "lite_spec", "lower", "m2_spec",
+    "make_ball_grouper", "register_backend", "register_fused_op",
+    "register_grouper", "register_sampler", "spec_fingerprint",
+    "spec_label", "spec_to_config",
 ]

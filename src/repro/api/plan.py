@@ -42,8 +42,11 @@ the dataflow the FPGA pipeline implies.  Fused entries live in the
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import itertools
+import json
 import warnings
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
 
 from repro.api import registry
 from repro.api.spec import N_STAGES as _N_STAGES
@@ -448,3 +451,114 @@ def lower_config(cfg, backend_fn: Callable,
                      stage_precision=(precision,) * _N_STAGES,
                      stage_backend=(backend_key,) * _N_STAGES,
                      precision=precision, backend=backend_key)
+
+
+# ------------------------------------------- fingerprint / search space -
+
+def spec_fingerprint(spec) -> str:
+    """Deterministic 12-hex-char fingerprint of a spec's field values.
+
+    The identity key of one point in the design space: two specs share
+    a fingerprint iff they lower the same (field order is canonicalized,
+    tuples/lists normalize to the same JSON, and an unset
+    ``stage_precision``/``stage_backend`` hashes as the full inherited
+    tuple — so the all-fp32 anchor and its explicit-tuple twin are one
+    point).  Used by ``repro.tune`` to name, dedupe and diff
+    ``BENCH_<rev>.json`` rows across revisions — stable as long as the
+    spec itself is.
+    """
+    d = dataclasses.asdict(spec)
+    prec, back = _inherited_stage_fields(spec)
+    d["stage_precision"], d["stage_backend"] = list(prec), list(back)
+    blob = json.dumps(d, sort_keys=True, default=str,
+                      separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()[:12]
+
+
+def _inherited_stage_fields(spec) -> Tuple[Tuple[str, ...], Tuple[str, ...]]:
+    """Stage tuples with spec-level inheritance applied — the shape
+    :func:`resolve_stage_fields` resolves to, without its registry
+    checks or warnings (fingerprinting/labeling must stay pure)."""
+    prec = tuple(spec.stage_precision or (spec.precision,) * _N_STAGES)
+    back = tuple(spec.stage_backend or (spec.backend,) * _N_STAGES)
+    return prec, back
+
+
+def spec_label(spec) -> str:
+    """Compact human-readable rendering of the *searched* axes of a spec
+    (the tuner's row name — stable across revisions for the CI diff)."""
+    prec, back = _inherited_stage_fields(spec)
+    return (f"{spec.sampler}/{spec.grouper}"
+            f"/prec={'.'.join(prec)}+{spec.precision}"
+            f"/be={back[0] if len(set(back)) == 1 else '.'.join(back)}"
+            f"/fg={getattr(spec, 'fused_group', 'none')}"
+            f"/ds={spec.data_shards}")
+
+
+#: Default per-stage precision ladder searched by the autotuner: the
+#: two uniform endpoints plus the paper-style tail-in-fp32 mixes.
+DEFAULT_STAGE_PRECISIONS: Tuple[Tuple[str, ...], ...] = (
+    ("fp32",) * _N_STAGES,
+    ("int8",) * _N_STAGES,
+    ("int8", "int8", "int8", "fp32"),
+    ("int8", "int8", "fp32", "fp32"),
+)
+
+
+def _fused_valid(spec) -> bool:
+    """Static validity of a fused_group choice — mirrors the hard
+    errors :func:`lower` raises, so enumeration never yields a spec
+    that cannot lower."""
+    if spec.fused_group == "none":
+        return True
+    if spec.fused_group not in registry.FUSED_OPS:
+        return False
+    if spec.grouper != "knn" or not spec.fuse:
+        return False
+    prec = spec.stage_precision or (spec.precision,) * _N_STAGES
+    return all(p == "fp32" for p in prec)
+
+
+def enumerate_plan_space(base,
+                         *,
+                         stage_precisions: Iterable = DEFAULT_STAGE_PRECISIONS,
+                         stage_backends: Iterable = (("ref",) * _N_STAGES,),
+                         fused_groups: Iterable = ("none",),
+                         data_shards: Iterable = (1,),
+                         samplers: Optional[Iterable] = None,
+                         groupers: Optional[Iterable] = None) -> List:
+    """Enumerate the valid spec search space around ``base``.
+
+    The cross product ``stage_precision`` x ``stage_backend`` x
+    ``fused_group`` x ``data_shards`` x sampler x grouper, with every
+    statically-invalid combination dropped (fused group->transfer with
+    an int8 stage or non-knn grouper; an int8 stage naming a pallas
+    backend, which would only warn-and-fall-back; unknown registry
+    keys).  Deterministic order — the cross product in argument order —
+    so the autotuner's candidate ranking is reproducible.
+    """
+    samplers = tuple(samplers) if samplers is not None else (base.sampler,)
+    groupers = tuple(groupers) if groupers is not None else (base.grouper,)
+    out = []
+    for sp, sb, fg, ds, sam, grp in itertools.product(
+            tuple(tuple(p) for p in stage_precisions),
+            tuple(tuple(b) for b in stage_backends),
+            tuple(fused_groups), tuple(data_shards),
+            samplers, groupers):
+        if any(b not in registry.BACKENDS for b in sb):
+            continue
+        if sam not in registry.SAMPLERS or grp not in registry.GROUPERS:
+            continue
+        # An int8 stage on a pallas backend falls back to the reference
+        # int8 matmul with a warning (escalated in-tree) — that point
+        # duplicates the ref one, so the space drops it outright.
+        if any(p == "int8" and b in _PALLAS_BACKENDS
+               for p, b in zip(sp, sb)):
+            continue
+        spec = base.replace(stage_precision=sp, stage_backend=sb,
+                            fused_group=fg, data_shards=ds,
+                            sampler=sam, grouper=grp)
+        if not _fused_valid(spec):
+            continue
+        out.append(spec)
+    return out

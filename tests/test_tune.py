@@ -1,0 +1,331 @@
+"""Autotuner suite: roofline estimator ranking, deterministic Pareto
+selection, BENCH artifact schema round-trip/rejection, bench_diff gate.
+
+The estimator tests pin the property the search relies on — that the
+static plan estimate orders the precision ladder the way the paper's
+DSE does (all-int8 <= mixed <= all-fp32 on estimated time) — and the
+frontier/artifact tests pin the determinism + validation contracts the
+CI regression gate consumes.
+"""
+from __future__ import annotations
+
+import importlib.util
+import json
+import pathlib
+import random
+import subprocess
+import sys
+
+import pytest
+
+from repro import roofline
+from repro.api import (enumerate_plan_space, lite_spec, lower,
+                       spec_fingerprint, spec_label)
+from repro.tune import (ANCHOR_NAME, ArtifactError, anchor_spec,
+                        new_artifact, new_row, pareto_frontier,
+                        read_artifact, tune, validate_artifact,
+                        write_artifact)
+
+_ROOT = pathlib.Path(__file__).resolve().parents[1]
+_BENCH_DIFF = _ROOT / "scripts" / "bench_diff.py"
+
+
+def tiny_spec(**overrides):
+    base = lite_spec(8).replace(n_points=64, embed_dim=16, k_neighbors=4,
+                                precision="fp32")
+    return base.replace(**overrides) if overrides else base
+
+
+def estimate(spec, hw=roofline.TPU_V5E):
+    cfg = spec.to_model_config()
+    return roofline.estimate_plan(lower(spec, cfg), cfg, hw,
+                                  data_shards=spec.data_shards)
+
+
+# --------------------------------------------------------- estimator ----
+
+class TestEstimator:
+    def test_precision_ladder_ranks(self):
+        """all-int8 <= mixed <= all-fp32 on estimated time — int8 buys
+        a higher peak *and* smaller weights, so the ladder must order
+        monotonically under every hardware model."""
+        fp32 = tiny_spec()
+        mixed = tiny_spec(stage_precision=("int8", "int8", "fp32", "fp32"))
+        int8 = tiny_spec(stage_precision=("int8",) * 4)
+        for hw in (roofline.TPU_V5E, roofline.CPU_HOST):
+            t_fp32 = estimate(fp32, hw).total_s
+            t_mixed = estimate(mixed, hw).total_s
+            t_int8 = estimate(int8, hw).total_s
+            assert t_int8 <= t_mixed <= t_fp32, (hw.name, t_int8,
+                                                 t_mixed, t_fp32)
+            assert t_int8 < t_fp32
+
+    def test_rows_mirror_cost_breakdown(self):
+        spec = tiny_spec(stage_precision=("int8", "int8", "int8", "fp32"))
+        cfg = spec.to_model_config()
+        plan = lower(spec, cfg)
+        est = roofline.estimate_plan(plan, cfg)
+        breakdown = plan.cost_breakdown(cfg)
+        assert [r["op"] for r in est.rows] == [r["op"] for r in breakdown]
+        for er, br in zip(est.rows, breakdown):
+            assert er["flops"] == br["flops"]
+            assert er["t_bound"] == max(er["t_compute"], er["t_memory"])
+        # per-stage precision threads through to the op rows
+        assert {r["precision"] for r in est.rows
+                if r["op"].startswith("stage1.")} == {"int8"}
+        assert {r["precision"] for r in est.rows
+                if r["op"].startswith("stage4.")} == {"fp32"}
+        assert est.sps == pytest.approx(1.0 / est.total_s)
+
+    def test_sharding_and_fusion_shrink_estimate(self):
+        base_t = estimate(tiny_spec()).total_s
+        fused_t = estimate(tiny_spec(fused_group="grouped_transfer")).total_s
+        sharded_t = estimate(tiny_spec(data_shards=8)).total_s
+        assert fused_t < base_t          # grouped tensor traffic drops
+        assert sharded_t < base_t        # batch splits over the mesh
+
+
+# ------------------------------------------------------- enumeration ----
+
+class TestSearchSpace:
+    def test_fingerprint_identity(self):
+        a, b = tiny_spec(), tiny_spec()
+        assert spec_fingerprint(a) == spec_fingerprint(b)
+        assert spec_fingerprint(a) != spec_fingerprint(
+            tiny_spec(stage_precision=("int8",) * 4))
+        # the unset-tuple spec and its explicit inherited twin are ONE
+        # design point (the anchor dedupe contract)
+        assert spec_fingerprint(tiny_spec()) == spec_fingerprint(
+            tiny_spec(stage_precision=("fp32",) * 4,
+                      stage_backend=("ref",) * 4))
+
+    def test_labels_stable_and_distinct(self):
+        specs = enumerate_plan_space(
+            tiny_spec(), fused_groups=("none", "grouped_transfer"))
+        labels = [spec_label(s) for s in specs]
+        assert len(set(labels)) == len(labels)
+        assert all("/prec=" in lbl and "/fg=" in lbl for lbl in labels)
+
+    def test_invalid_combos_dropped_and_rest_lower(self):
+        specs = enumerate_plan_space(
+            tiny_spec(),
+            stage_backends=(("ref",) * 4, ("pallas_interpret",) * 4),
+            fused_groups=("none", "grouped_transfer", "no-such-kernel"))
+        assert specs, "space unexpectedly empty"
+        for s in specs:
+            # fused requires an all-fp32 ladder; int8 stages never pair
+            # with a pallas backend (the warn-and-fall-back trap)
+            if s.fused_group != "none":
+                assert set(s.stage_precision) == {"fp32"}
+            assert not any(
+                p == "int8" and b.startswith("pallas")
+                for p, b in zip(s.stage_precision, s.stage_backend))
+            lower(s, s.to_model_config())    # must not raise
+
+    def test_non_knn_grouper_cannot_fuse(self):
+        specs = enumerate_plan_space(
+            tiny_spec(grouper="ball"),
+            fused_groups=("grouped_transfer",))
+        assert specs == []
+
+
+# ---------------------------------------------------------- frontier ----
+
+def _pt(name, err, sps):
+    return new_row(name, measured_sps=sps, err_vs_fp32=err)
+
+
+class TestFrontier:
+    ROWS = [_pt("a", 0.0, 100.0),      # anchor-ish: best err
+            _pt("b", 0.01, 150.0),     # frontier: trades err for sps
+            _pt("c", 0.02, 120.0),     # dominated by b
+            _pt("d", 0.03, 200.0),     # frontier: fastest
+            _pt("e", 0.01, 150.0)]     # exact tie of b: both survive
+
+    def test_selection(self):
+        names = [r["name"] for r in pareto_frontier(self.ROWS)]
+        assert names == ["a", "b", "e", "d"]
+
+    def test_deterministic_under_shuffle(self):
+        """Order-independent selection + canonical output order: every
+        seed-shuffled permutation of the rows yields the same frontier."""
+        baseline = pareto_frontier(self.ROWS)
+        for seed in range(5):
+            shuffled = list(self.ROWS)
+            random.Random(seed).shuffle(shuffled)
+            assert pareto_frontier(shuffled) == baseline
+
+    def test_unmeasured_rows_excluded(self):
+        rows = self.ROWS + [new_row("est-only", estimated_sps=1e6)]
+        assert all(r["name"] != "est-only" for r in pareto_frontier(rows))
+
+
+# ---------------------------------------------------------- artifact ----
+
+class TestArtifact:
+    def _doc(self):
+        return new_artifact(
+            [new_row("fp32-ref", measured_sps=100.0, err_vs_fp32=0.0,
+                     anchor=True, frontier=True,
+                     stages=[{"op": "embed", "flops": 10}]),
+             new_row("mixed", measured_sps=140.0, err_vs_fp32=0.01,
+                     estimated_sps=150.0, fingerprint="abc123def456")],
+            rev="deadbee")
+
+    def test_roundtrip(self, tmp_path):
+        doc = self._doc()
+        path = write_artifact(tmp_path / "BENCH_deadbee.json", doc)
+        assert read_artifact(path) == doc
+        # and the on-disk form is plain sorted JSON (diff-friendly)
+        raw = json.loads(path.read_text())
+        assert raw["schema"] == "repro.bench/v1"
+
+    def test_old_schema_rejected(self, tmp_path):
+        doc = self._doc()
+        doc["schema"] = "repro.bench/v0"
+        with pytest.raises(ArtifactError, match="repro.bench/v1"):
+            validate_artifact(doc)
+        (tmp_path / "old.json").write_text(json.dumps(doc))
+        with pytest.raises(ArtifactError, match="regenerate"):
+            read_artifact(tmp_path / "old.json")
+
+    @pytest.mark.parametrize("mutate,msg", [
+        (lambda d: d.pop("rows"), "rows"),
+        (lambda d: d["rows"].append({"no_name": 1}), "name"),
+        (lambda d: d["rows"].append(
+            {"name": "fp32-ref"}), "duplicate"),
+        (lambda d: d["rows"][0].update(measured_sps=float("nan")),
+         "finite"),
+        (lambda d: d["rows"][0].update(frontier="yes"), "bool"),
+    ])
+    def test_malformed_rejected(self, mutate, msg):
+        doc = self._doc()
+        mutate(doc)
+        with pytest.raises(ArtifactError, match=msg):
+            validate_artifact(doc)
+
+    def test_unreadable_file(self, tmp_path):
+        p = tmp_path / "garbage.json"
+        p.write_text("{not json")
+        with pytest.raises(ArtifactError, match="garbage.json"):
+            read_artifact(p)
+
+
+# ------------------------------------------------------- end to end -----
+
+class TestTune:
+    @pytest.fixture(scope="class")
+    def doc(self):
+        base = tiny_spec()
+        space = enumerate_plan_space(base)    # precision ladder, ref only
+        return tune(base, space=space, top_k=1, max_batch=2,
+                    n_requests=4, seed=0, rev="testrev")
+
+    def test_artifact_valid_with_anchor_on_frontier(self, doc):
+        validate_artifact(doc)
+        assert doc["rev"] == "testrev"
+        anchor = next(r for r in doc["rows"] if r["anchor"])
+        assert anchor["name"] == ANCHOR_NAME
+        assert anchor["measured_sps"] is not None
+        assert anchor["err_vs_fp32"] == 0.0
+        assert anchor["frontier"], "fp32-ref anchor must stay on the " \
+                                   "measured frontier"
+        assert anchor["stages"], "anchor row carries per-stage rows"
+
+    def test_estimates_seed_measurement(self, doc):
+        rows = doc["rows"]
+        assert all(r["estimated_sps"] is not None for r in rows)
+        measured = [r for r in rows if r["measured_sps"] is not None]
+        # anchor + top_k=1 (the anchor dedupes its explicit twin)
+        assert len(measured) == 2
+        # the measured non-anchor row is the estimated-fastest one
+        best = max((r for r in rows if not r["anchor"]),
+                   key=lambda r: r["estimated_sps"])
+        assert best["measured_sps"] is not None
+
+    def test_rows_are_deduped_and_fingerprinted(self, doc):
+        names = [r["name"] for r in doc["rows"]]
+        fps = [r["fingerprint"] for r in doc["rows"]]
+        assert len(set(names)) == len(names)
+        assert len(set(fps)) == len(fps)
+        anchor = next(r for r in doc["rows"] if r["anchor"])
+        assert anchor["fingerprint"] == spec_fingerprint(
+            anchor_spec(tiny_spec().serving()))
+
+
+# --------------------------------------------------------- bench_diff ---
+
+def _load_bench_diff():
+    spec = importlib.util.spec_from_file_location("bench_diff", _BENCH_DIFF)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _write(tmp_path, name, doc):
+    p = tmp_path / name
+    p.write_text(json.dumps(doc))
+    return p
+
+
+class TestBenchDiff:
+    def _doc(self, sps=100.0, err=0.01, rev="aaa"):
+        return new_artifact(
+            [new_row("fp32-ref", measured_sps=200.0, err_vs_fp32=0.0,
+                     anchor=True),
+             new_row("mixed", measured_sps=sps, err_vs_fp32=err),
+             new_row("est-only", estimated_sps=999.0)], rev=rev)
+
+    def test_self_diff_zero_regressions(self, tmp_path):
+        bd = _load_bench_diff()
+        doc = self._doc()
+        table, regressions = bd.diff_rows(doc, doc)
+        assert regressions == []
+        assert {r["status"] for r in table} == {"ok", "unmeasured"}
+
+    def test_sps_and_err_regressions_flagged(self, tmp_path):
+        bd = _load_bench_diff()
+        old = self._doc()
+        worse = self._doc(sps=50.0, err=0.2, rev="bbb")   # -50%, +0.19
+        table, regressions = bd.diff_rows(old, worse)
+        assert len(regressions) == 2
+        assert all("mixed" in m for m in regressions)
+        within = self._doc(sps=80.0, err=0.02, rev="ccc")  # -20%, +0.01
+        _, ok = bd.diff_rows(old, within)
+        assert ok == []
+
+    def test_new_and_gone_rows_pass(self):
+        bd = _load_bench_diff()
+        old, new = self._doc(), self._doc(rev="bbb")
+        new["rows"] = [r for r in new["rows"] if r["name"] != "mixed"]
+        new["rows"].append(new_row("fresh", measured_sps=1.0))
+        table, regressions = bd.diff_rows(old, new)
+        assert regressions == []
+        status = {r["name"]: r["status"] for r in table}
+        assert status["mixed"] == "gone" and status["fresh"] == "new"
+
+    def test_cli_smoke(self, tmp_path):
+        """The exact CI invocation: self-diff exits 0, a regressed
+        artifact exits 1, an old-schema baseline exits 2."""
+        a = _write(tmp_path, "BENCH_a.json", self._doc())
+        b = _write(tmp_path, "BENCH_b.json", self._doc(sps=40.0,
+                                                       rev="bbb"))
+        old = self._doc()
+        old["schema"] = "repro.bench/v0"
+        stale = _write(tmp_path, "BENCH_stale.json", old)
+
+        def run(*argv):
+            return subprocess.run(
+                [sys.executable, str(_BENCH_DIFF), *argv],
+                capture_output=True, text=True,
+                env={**__import__("os").environ,
+                     "PYTHONPATH": str(_ROOT / "src")})
+        ok = run(str(a), str(a))
+        assert ok.returncode == 0, ok.stderr
+        assert "zero regressions" in ok.stdout
+        bad = run(str(a), str(b))
+        assert bad.returncode == 1
+        assert "REGRESSION" in bad.stdout
+        malformed = run(str(stale), str(a))
+        assert malformed.returncode == 2
+        assert "repro.bench/v1" in malformed.stderr
