@@ -34,6 +34,7 @@ _ROWS: list = []
 
 _SPS_RE = re.compile(r"(?:^|;)SPS=([0-9.eE+-]+)")
 _ERR_RE = re.compile(r"(?:^|;)err_vs_fp32=([0-9.eE+-]+)")
+_SHED_RE = re.compile(r"(?:^|;)shed_rate=([0-9.eE+-]+)")
 
 
 def _emit(name: str, us: float, derived: str) -> None:
@@ -41,10 +42,12 @@ def _emit(name: str, us: float, derived: str) -> None:
     from repro.tune import artifact as art
     sps = _SPS_RE.search(derived)
     err = _ERR_RE.search(derived)
+    shed = _SHED_RE.search(derived)
     _ROWS.append(art.new_row(
         name, us_per_call=us, derived=derived,
         measured_sps=float(sps.group(1)) if sps else None,
-        err_vs_fp32=float(err.group(1)) if err else None))
+        err_vs_fp32=float(err.group(1)) if err else None,
+        shed_rate=float(shed.group(1)) if shed else None))
 
 
 def bench_kernels() -> None:
@@ -279,6 +282,68 @@ def bench_spec_async() -> None:
               f"padded={s.padded};SPS={s.samples_per_s:.1f}")
 
 
+def bench_fleet() -> None:
+    """One ``fleet_<policy>`` row per batching policy (fleet smoke).
+
+    Serves a two-tier pool (int8 lite + fp32 "elite" of the same tiny
+    model) x2 replicas to two tenants — a tight-SLO real-time stream
+    with a small ``max_inflight`` bulkhead and a patient bulk tenant —
+    through :class:`repro.serve.fleet.PipelineFleet`, submitting both
+    tenants' traffic in bursts so admission control sheds some of the
+    real-time tenant's burst.  Each row reports aggregate SPS, the
+    shed rate (gated by ``scripts/bench_diff.py --shed-tol``), and
+    per-tenant p50/p99 wait.
+    """
+    import jax
+
+    from repro.api import FleetSpec, TenantSpec, lite_spec
+    from repro.data import pointclouds
+    from repro.models import pointmlp as PM
+    from repro.serve.fleet import Overloaded, PipelineFleet
+    from repro.serve.policy import POLICIES
+
+    base = lite_spec(pointclouds.N_CLASSES).replace(
+        n_points=128, embed_dim=16, k_neighbors=8,
+        precision="fp32").serving(slo_ms=5.0)
+    tiers = (base.replace(name="fleet-lite", precision="int8"),
+             base.replace(name="fleet-elite"))
+    params = {s.name: PM.pointmlp_init(jax.random.PRNGKey(0),
+                                       s.to_model_config())
+              for s in tiers}
+    pts, _ = pointclouds.make_batch(jax.random.PRNGKey(1),
+                                    base.n_points, 12)
+    for policy in POLICIES.names():
+        spec = FleetSpec(
+            pipelines=tuple(t.replace(policy=policy) for t in tiers),
+            tenants=(TenantSpec("rt", "fleet-lite", slo_ms=0.0,
+                                max_inflight=4),
+                     TenantSpec("bulk", "fleet-elite", slo_ms=0.0)),
+            replicas=2, max_batch=4)
+        fleet = PipelineFleet.from_specs(spec, params, seed=0)
+        fleet.warmup()               # keep compile time out of the row
+        t0 = time.time()
+        for p in pts:                # both tenants burst, no pumping:
+            for tenant in ("rt", "bulk"):     # rt's bulkhead sheds
+                try:
+                    fleet.submit(tenant, p)
+                except Overloaded:
+                    pass
+        while fleet.pump():
+            pass
+        fleet.flush()
+        us = (time.time() - t0) * 1e6
+        s = fleet.stats()
+        ts = fleet.tenant_stats()
+        offered = s["requests"] + s["shed"]
+        waits = ";".join(
+            f"{t}_p50={ts[t]['p50_ms']:.2f};{t}_p99={ts[t]['p99_ms']:.2f}"
+            for t in sorted(ts) if ts[t]["p50_ms"] is not None)
+        _emit(f"fleet_{policy}", us,
+              f"policy={policy};requests={s['requests']};"
+              f"shed={s['shed']};shed_rate={s['shed'] / offered:.3f};"
+              f"{waits};SPS={s['samples_per_s']:.1f}")
+
+
 def bench_serve_pointcloud(quick: bool) -> None:
     from benchmarks import serve_pointcloud
     for name, us, derived in serve_pointcloud.rows(
@@ -384,6 +449,7 @@ def main() -> None:
     bench_spec_plan()
     bench_spec_sharded()
     bench_spec_async()
+    bench_fleet()
     bench_serve_pointcloud(args.quick)
     if not args.quick:
         bench_table1(args.table1_steps)

@@ -2,12 +2,15 @@
 """Diff two ``BENCH_<rev>.json`` perf artifacts (the CI regression gate).
 
     python scripts/bench_diff.py BASELINE.json NEW.json \
-        [--sps-tol 0.25] [--err-tol 0.05]
+        [--sps-tol 0.25] [--err-tol 0.05] [--shed-tol 0.10]
 
-Matches rows by name, prints a table of measured SPS / err-vs-fp32
-deltas, and exits non-zero when any tracked row *regresses*: measured
-SPS drops by more than ``--sps-tol`` (fraction of the baseline) or
-err-vs-fp32 worsens by more than ``--err-tol`` (absolute).  Rows that
+Matches rows by name, prints a table of measured SPS / err-vs-fp32 /
+shed-rate deltas, and exits non-zero when any tracked row *regresses*:
+measured SPS drops by more than ``--sps-tol`` (fraction of the
+baseline), err-vs-fp32 worsens by more than ``--err-tol`` (absolute),
+or a fleet row's shed rate worsens by more than ``--shed-tol``
+(absolute — admission control shedding more of the same offered load
+is a serving regression, same as a latency cliff).  Rows that
 exist on only one side are reported but never fail the gate (specs come
 and go as the search space evolves); estimate-only rows (no measured
 SPS) are skipped.  A malformed or old-schema artifact exits 2 with the
@@ -30,6 +33,7 @@ from repro.tune.artifact import ArtifactError, read_artifact  # noqa: E402
 
 DEFAULT_SPS_TOL = 0.25
 DEFAULT_ERR_TOL = 0.05
+DEFAULT_SHED_TOL = 0.10
 
 
 def _fmt(v: Optional[float], unit: str = "") -> str:
@@ -40,7 +44,8 @@ def _fmt(v: Optional[float], unit: str = "") -> str:
 
 def diff_rows(old: Dict[str, Any], new: Dict[str, Any],
               *, sps_tol: float = DEFAULT_SPS_TOL,
-              err_tol: float = DEFAULT_ERR_TOL
+              err_tol: float = DEFAULT_ERR_TOL,
+              shed_tol: float = DEFAULT_SHED_TOL
               ) -> Tuple[List[Dict[str, Any]], List[str]]:
     """Compare two validated artifact docs.
 
@@ -60,6 +65,8 @@ def diff_rows(old: Dict[str, Any], new: Dict[str, Any],
                "new_sps": n.get("measured_sps") if n else None,
                "old_err": o.get("err_vs_fp32") if o else None,
                "new_err": n.get("err_vs_fp32") if n else None,
+               "old_shed": o.get("shed_rate") if o else None,
+               "new_shed": n.get("shed_rate") if n else None,
                "delta_sps_pct": None, "status": "ok"}
         if o is None:
             row["status"] = "new"
@@ -86,16 +93,26 @@ def diff_rows(old: Dict[str, Any], new: Dict[str, Any],
                     f"{row['new_err']:.5g} (worsened by "
                     f"{row['new_err'] - row['old_err']:.5g}, tolerance "
                     f"+{err_tol:g})")
+            if (row["old_shed"] is not None
+                    and row["new_shed"] is not None
+                    and row["new_shed"] > row["old_shed"] + shed_tol):
+                row["status"] = "REGRESSION"
+                regressions.append(
+                    f"{name}: shed_rate {row['old_shed']:.3f} -> "
+                    f"{row['new_shed']:.3f} (worsened by "
+                    f"{row['new_shed'] - row['old_shed']:.3f}, tolerance "
+                    f"+{shed_tol:g})")
         table.append(row)
     return table, regressions
 
 
 def print_table(table: List[Dict[str, Any]], *, file=sys.stdout) -> None:
     cols = ("name", "old SPS", "new SPS", "dSPS%", "old err", "new err",
-            "status")
+            "old shed", "new shed", "status")
     lines = [[r["name"], _fmt(r["old_sps"]), _fmt(r["new_sps"]),
               _fmt(r["delta_sps_pct"]), _fmt(r["old_err"]),
-              _fmt(r["new_err"]), r["status"]] for r in table]
+              _fmt(r["new_err"]), _fmt(r.get("old_shed")),
+              _fmt(r.get("new_shed")), r["status"]] for r in table]
     widths = [max(len(c), *(len(ln[i]) for ln in lines)) if lines
               else len(c) for i, c in enumerate(cols)]
     def emit(cells):
@@ -117,6 +134,9 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--err-tol", type=float, default=DEFAULT_ERR_TOL,
                     help="allowed absolute err_vs_fp32 worsening per row "
                          "(default %(default)s)")
+    ap.add_argument("--shed-tol", type=float, default=DEFAULT_SHED_TOL,
+                    help="allowed absolute shed_rate worsening per "
+                         "fleet row (default %(default)s)")
     args = ap.parse_args(argv)
 
     try:
@@ -129,7 +149,8 @@ def main(argv: Optional[List[str]] = None) -> int:
     print(f"baseline: {args.baseline} (rev {old['rev']})")
     print(f"new     : {args.new} (rev {new['rev']})")
     table, regressions = diff_rows(old, new, sps_tol=args.sps_tol,
-                                   err_tol=args.err_tol)
+                                   err_tol=args.err_tol,
+                                   shed_tol=args.shed_tol)
     print_table(table)
     if regressions:
         print(f"\n{len(regressions)} regression(s) beyond tolerance:")
@@ -137,7 +158,8 @@ def main(argv: Optional[List[str]] = None) -> int:
             print(f"  {msg}")
         return 1
     print("\nzero regressions (tolerances: "
-          f"SPS -{args.sps_tol * 100:.0f}%, err +{args.err_tol:g})")
+          f"SPS -{args.sps_tol * 100:.0f}%, err +{args.err_tol:g}, "
+          f"shed +{args.shed_tol:g})")
     return 0
 
 

@@ -18,7 +18,7 @@ submodule of the same name, regardless of import order.
 """
 from __future__ import annotations
 
-from repro.api.build import FrozenPipeline, build
+from repro.api.build import FrozenPipeline, build, build_pool
 from repro.api.compat import config_to_spec, spec_to_config
 from repro.api.plan import (StagePlan, enumerate_plan_space, lower,
                             spec_fingerprint, spec_label)
@@ -26,14 +26,15 @@ from repro.api.registry import (BACKENDS, FUSED_OPS, GROUPERS, SAMPLERS,
                                 Registry, make_ball_grouper,
                                 register_backend, register_fused_op,
                                 register_grouper, register_sampler)
-from repro.api.spec import (PipelineSpec, compression_ladder_specs,
-                            elite_spec, lite_spec, m2_spec)
+from repro.api.spec import (FleetSpec, PipelineSpec, TenantSpec,
+                            compression_ladder_specs, elite_spec,
+                            lite_spec, m2_spec)
 
 __all__ = [
-    "BACKENDS", "FUSED_OPS", "FrozenPipeline", "GROUPERS", "PipelineSpec",
-    "Registry", "SAMPLERS", "StagePlan", "build",
-    "compression_ladder_specs", "config_to_spec", "elite_spec",
-    "enumerate_plan_space", "lite_spec", "lower", "m2_spec",
+    "BACKENDS", "FUSED_OPS", "FleetSpec", "FrozenPipeline", "GROUPERS",
+    "PipelineSpec", "Registry", "SAMPLERS", "StagePlan", "TenantSpec",
+    "build", "build_pool", "compression_ladder_specs", "config_to_spec",
+    "elite_spec", "enumerate_plan_space", "lite_spec", "lower", "m2_spec",
     "make_ball_grouper", "register_backend", "register_fused_op",
     "register_grouper", "register_sampler", "spec_fingerprint",
     "spec_label", "spec_to_config",

@@ -17,7 +17,7 @@ that hold state across calls (the serving engine) thread it themselves.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -26,29 +26,16 @@ from repro.api import registry
 from repro.api.spec import PipelineSpec
 
 
-def build(spec: PipelineSpec, params: Dict, *, jit: bool = True,
-          donate_lfsr: bool = False) -> "FrozenPipeline":
-    """Compile a spec + trained params into a frozen executable pipeline.
-
-    Args:
-      spec: the variant description (registry keys are resolved here —
-        a typo raises ``KeyError`` listing the registered names).
-      params: trained parameter tree (BN running stats populated when
-        ``spec.fuse``).
-      jit: wrap the forward in ``jax.jit`` (one executable per
-        ``(batch, n_points)`` shape).  ``jit=False`` gives the eager
-        walk — bit-identical to the legacy un-jitted entry points.
-      donate_lfsr: donate the LFSR argument buffer to each jitted call
-        (serving engines that immediately replace their state with the
-        returned one; invalid for callers that reuse the input buffer).
-    """
+def _freeze(spec: PipelineSpec, params: Dict) -> Tuple[Dict, Any, Any]:
+    """The placement-independent half of :func:`build`: fuse BN, lower
+    the stage plan, selectively export int8.  Returns
+    ``(frozen_params, deploy_cfg, plan)`` — everything two replicas of
+    the same spec + params can share without re-tracing
+    (:func:`build_pool` dedupes on exactly this)."""
     from repro.api import plan as stage_plan
     from repro.core import fusion
     from repro.core.quant import QuantConfig, quantize_tree
-    from repro.models import pointmlp as PM
 
-    sampler, grouper, backend = registry.resolve(
-        spec.sampler, spec.grouper, spec.backend)
     cfg = spec.to_model_config()
     frozen = params
     if spec.fuse:
@@ -69,6 +56,17 @@ def build(spec: PipelineSpec, params: Dict, *, jit: bool = True,
                           else QuantConfig(w_bits=32, a_bits=32))
     else:
         cfg = cfg.replace(quant=QuantConfig(w_bits=32, a_bits=32))
+    return frozen, cfg, plan
+
+
+def _place(spec: PipelineSpec, frozen: Dict, cfg, plan, *, jit: bool,
+           donate_lfsr: bool, mesh) -> "FrozenPipeline":
+    """The placement half of :func:`build`: resolve registry keys, wrap
+    the walk, shard it over its mesh, jit."""
+    from repro.models import pointmlp as PM
+
+    sampler, grouper, backend = registry.resolve(
+        spec.sampler, spec.grouper, spec.backend)
 
     def fwd(p, pts, lfsr):
         return PM.pointmlp_infer_with(
@@ -76,19 +74,130 @@ def build(spec: PipelineSpec, params: Dict, *, jit: bool = True,
             backend=backend, shared_urs=spec.shared_urs,
             per_sample_norm=spec.per_sample_norm, plan=plan)
 
-    mesh = None
+    out_mesh = None
     if spec.data_shards > 1:
         # Shard step: after fuse/quantize, before jit — the frozen
         # forward is split batch-wise over a 1-D device mesh.  Deferred
         # import: repro.serve sits above this package in the import
         # graph (mirrors the policy-registry deferral in spec.validate).
         from repro.serve.sharding import shard_forward
-        fwd, mesh = shard_forward(fwd, spec)
+        fwd, out_mesh = shard_forward(fwd, spec, mesh=mesh)
+    elif mesh is not None:
+        raise ValueError(
+            "build() was given a placement mesh but spec.data_shards "
+            "== 1 — an unsharded pipeline has no mesh to place on "
+            "(set spec.data_shards to the mesh's data axis)")
 
     fn = jax.jit(fwd, donate_argnums=(2,) if donate_lfsr else ()) \
         if jit else fwd
     return FrozenPipeline(spec=spec, params=frozen, model_config=cfg,
-                          _fn=fn, mesh=mesh, plan=plan)
+                          _fn=fn, mesh=out_mesh, plan=plan)
+
+
+def build(spec: PipelineSpec, params: Dict, *, jit: bool = True,
+          donate_lfsr: bool = False, mesh=None) -> "FrozenPipeline":
+    """Compile a spec + trained params into a frozen executable pipeline.
+
+    Args:
+      spec: the variant description (registry keys are resolved here —
+        a typo raises ``KeyError`` listing the registered names).
+      params: trained parameter tree (BN running stats populated when
+        ``spec.fuse``).
+      jit: wrap the forward in ``jax.jit`` (one executable per
+        ``(batch, n_points)`` shape).  ``jit=False`` gives the eager
+        walk — bit-identical to the legacy un-jitted entry points.
+      donate_lfsr: donate the LFSR argument buffer to each jitted call
+        (serving engines that immediately replace their state with the
+        returned one; invalid for callers that reuse the input buffer).
+      mesh: a pre-built 1-D ``("data",)`` mesh of ``spec.data_shards``
+        devices to dispatch over instead of the default first-devices
+        mesh — fleet placement passes each replica's
+        ``repro.serve.sharding.replica_submesh`` row.  Only valid for
+        sharded specs.
+    """
+    frozen, cfg, plan = _freeze(spec, params)
+    return _place(spec, frozen, cfg, plan, jit=jit,
+                  donate_lfsr=donate_lfsr, mesh=mesh)
+
+
+def build_pool(specs: Sequence[PipelineSpec],
+               params_by_name: Mapping[str, Dict], *, jit: bool = True,
+               mesh=None) -> List["FrozenPipeline"]:
+    """Build a fleet pool: one :class:`FrozenPipeline` per spec, with
+    shared structure deduped instead of re-traced.
+
+    Replicas of the same spec + params share one
+    fuse/lower/int8-export pass (:func:`_freeze` runs once per distinct
+    ``(spec_fingerprint, params)``), and *unsharded* identical replicas
+    share the whole pipeline object — one jit cache, one compile, N
+    pool slots.  Sharded replicas each get their own
+    ``shard_map`` wrap over their row of the 2-D
+    ``("replica", "data")`` mesh (built here when not passed), so two
+    replicas never dispatch onto the same device.
+
+    Args:
+      specs: the flat pool, one spec per replica, in mesh-row order
+        (``FleetSpec.pool_specs()``).  All must agree on
+        ``data_shards``.
+      params_by_name: parameter tree per ``spec.name`` — replicas of a
+        pipeline share its entry.  A missing name raises ``KeyError``
+        listing what was provided.
+      mesh: a pre-built ``("replica", "data")`` mesh whose replica
+        axis is ``len(specs)``; None builds one when the pool is
+        sharded.
+    """
+    from repro.api import plan as stage_plan
+
+    specs = list(specs)
+    shards = {s.data_shards for s in specs}
+    if len(shards) > 1:
+        raise ValueError(f"pool specs must agree on data_shards (the "
+                         f"replica x data mesh is rectangular), got "
+                         f"{sorted(shards)}")
+    data_shards = shards.pop() if specs else 1
+    if data_shards > 1:
+        from repro.serve.sharding import make_mesh2d, replica_submesh
+        if mesh is None:
+            mesh = make_mesh2d(len(specs), data_shards)
+        if tuple(mesh.axis_names) != ("replica", "data") \
+                or mesh.devices.shape[0] != len(specs):
+            raise ValueError(
+                f"build_pool needs a ('replica', 'data') mesh with one "
+                f"row per pool spec ({len(specs)}); got axes "
+                f"{tuple(mesh.axis_names)} shape {mesh.devices.shape}")
+    elif mesh is not None:
+        raise ValueError("build_pool was given a mesh but the pool is "
+                         "unsharded (data_shards == 1)")
+
+    frozen_cache: Dict[Tuple[str, int], Tuple] = {}
+    shared_pipes: Dict[Tuple[PipelineSpec, int], FrozenPipeline] = {}
+    pool: List[FrozenPipeline] = []
+    for i, spec in enumerate(specs):
+        try:
+            params = params_by_name[spec.name]
+        except KeyError:
+            raise KeyError(
+                f"build_pool: no params for pool pipeline {spec.name!r}; "
+                f"params_by_name has "
+                f"{', '.join(map(repr, params_by_name))}") from None
+        fkey = (stage_plan.spec_fingerprint(spec), id(params))
+        if fkey not in frozen_cache:
+            frozen_cache[fkey] = _freeze(spec, params)
+        frozen, cfg, plan = frozen_cache[fkey]
+        if data_shards > 1:
+            pool.append(_place(spec, frozen, cfg, plan, jit=jit,
+                               donate_lfsr=False,
+                               mesh=replica_submesh(mesh, i)))
+            continue
+        # Unsharded replicas of one (spec, params) are interchangeable
+        # executables — share the FrozenPipeline so the pool compiles
+        # each distinct variant exactly once.
+        pkey = (spec, id(params))
+        if pkey not in shared_pipes:
+            shared_pipes[pkey] = _place(spec, frozen, cfg, plan, jit=jit,
+                                        donate_lfsr=False, mesh=None)
+        pool.append(shared_pipes[pkey])
+    return pool
 
 
 @dataclasses.dataclass(frozen=True)

@@ -239,6 +239,155 @@ class PipelineSpec:
         return cls(**fields)
 
 
+# ------------------------------------------------- fleet serving --------
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """One tenant's serving contract, declaratively.
+
+    A tenant is a traffic class with its own latency/accuracy deal:
+    the real-time LiDAR stream takes the int8 Lite tier at a tight SLO,
+    the batch-analytics backfill takes the fp32 Elite tier and can
+    wait.  ``repro.serve.fleet.PipelineFleet`` routes each tenant's
+    requests to pool replicas of its tier and load-sheds (typed
+    :class:`~repro.serve.admission.Overloaded`) past the admission
+    bounds below.
+
+    Fields:
+      name: tenant id — the key callers pass to ``fleet.submit``.
+      tier: which pool pipeline serves this tenant — a
+        :class:`PipelineSpec` ``name`` from the owning
+        :class:`FleetSpec`'s pool.
+      slo_ms: per-request latency objective.  Admission control sheds
+        a request when the tier's *calibrated* cost model says the
+        queue ahead of it is not servable inside this budget
+        (0 = no SLO-based shedding).
+      max_inflight: hard cap on this tenant's unresolved (admitted but
+        unanswered) requests — the bulkhead that keeps one tenant's
+        burst from queueing out everyone else.
+    """
+    name: str
+    tier: str
+    slo_ms: float = 50.0
+    max_inflight: int = 64
+
+    def __post_init__(self):
+        if not self.name or not isinstance(self.name, str):
+            raise ValueError(f"tenant name must be a non-empty string, "
+                             f"got {self.name!r}")
+        if not self.tier or not isinstance(self.tier, str):
+            raise ValueError(f"tenant {self.name!r} tier must be a "
+                             f"non-empty string, got {self.tier!r}")
+        if self.slo_ms < 0:
+            raise ValueError(f"tenant {self.name!r} slo_ms must be >= 0, "
+                             f"got {self.slo_ms!r}")
+        if not isinstance(self.max_inflight, int) or self.max_inflight < 1:
+            raise ValueError(f"tenant {self.name!r} max_inflight must be "
+                             f"a positive int, got {self.max_inflight!r}")
+
+    def replace(self, **kw) -> "TenantSpec":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetSpec:
+    """A whole serving deployment, declaratively: the pipeline pool,
+    the tenants, and the routing/placement policy.
+
+    The accuracy/throughput ladder behind one front door: ``pipelines``
+    are the distinct variants (elite/m2/lite, fp32/mixed/int8 — any
+    :class:`PipelineSpec`, each with a unique ``name``), ``replicas``
+    stamps out that many copies of each, and every tenant names its
+    tier.  ``repro.serve.fleet.PipelineFleet.from_specs`` builds the
+    pool (``repro.api.build.build_pool`` — shared frozen structure, no
+    re-tracing) and places replicas over a 2-D ``("replica", "data")``
+    device mesh when the pool is sharded.
+
+    Pool order is ``replicas`` copies of the ``pipelines`` tuple in
+    sequence (replica ``r`` of pipeline ``i`` sits at pool index
+    ``r * len(pipelines) + i``) — the mesh row assignment is exactly
+    this order, so placement is reproducible from the spec alone.
+    """
+    name: str = "fleet"
+    pipelines: Tuple[PipelineSpec, ...] = ()
+    tenants: Tuple[TenantSpec, ...] = ()
+    replicas: int = 1
+    router: str = "least-loaded"
+    max_batch: int = 8
+
+    def __post_init__(self):
+        for field in ("pipelines", "tenants"):
+            val = getattr(self, field)
+            if isinstance(val, list):        # normalize to a hashable spec
+                object.__setattr__(self, field, tuple(val))
+        if not self.pipelines:
+            raise ValueError("FleetSpec needs at least one pipeline")
+        if not all(isinstance(p, PipelineSpec) for p in self.pipelines):
+            raise ValueError("FleetSpec.pipelines must be PipelineSpecs")
+        if not all(isinstance(t, TenantSpec) for t in self.tenants):
+            raise ValueError("FleetSpec.tenants must be TenantSpecs")
+        names = [p.name for p in self.pipelines]
+        if len(set(names)) != len(names):
+            raise ValueError(f"pool pipeline names must be unique (they "
+                             f"key tenant tiers and params), got {names}")
+        tnames = [t.name for t in self.tenants]
+        if len(set(tnames)) != len(tnames):
+            raise ValueError(f"tenant names must be unique, got {tnames}")
+        for t in self.tenants:
+            if t.tier not in names:
+                raise ValueError(
+                    f"tenant {t.name!r} names tier {t.tier!r} but the "
+                    f"pool has only {names}")
+        shards = {p.data_shards for p in self.pipelines}
+        if len(shards) > 1:
+            raise ValueError(
+                f"pool pipelines must agree on data_shards (the 2-D "
+                f"replica x data mesh is rectangular), got {sorted(shards)}")
+        if not isinstance(self.replicas, int) or self.replicas < 1:
+            raise ValueError(f"replicas must be a positive int, "
+                             f"got {self.replicas!r}")
+        if not isinstance(self.max_batch, int) or self.max_batch < 1:
+            raise ValueError(f"max_batch must be a positive int, "
+                             f"got {self.max_batch!r}")
+        if self.max_batch % self.data_shards:
+            raise ValueError(
+                f"data_shards={self.data_shards} must divide "
+                f"max_batch={self.max_batch} (every fixed-shape dispatch "
+                f"splits across the mesh's data axis)")
+
+    @property
+    def data_shards(self) -> int:
+        """The (validated-uniform) data axis of the replica x data mesh."""
+        return self.pipelines[0].data_shards
+
+    def pool_specs(self) -> Tuple[PipelineSpec, ...]:
+        """The flat pool, one spec per replica, in mesh-row order."""
+        return tuple(p for _ in range(self.replicas) for p in self.pipelines)
+
+    def tier_of(self, tenant: str) -> PipelineSpec:
+        """The pipeline spec serving ``tenant`` (KeyError lists tenants)."""
+        for t in self.tenants:
+            if t.name == tenant:
+                return next(p for p in self.pipelines if p.name == t.tier)
+        raise KeyError(f"unknown tenant {tenant!r}; registered tenants: "
+                       f"{', '.join(t.name for t in self.tenants)}")
+
+    def replace(self, **kw) -> "FleetSpec":
+        return dataclasses.replace(self, **kw)
+
+    def validate(self) -> "FleetSpec":
+        """Resolve every registry key the fleet names: each pool
+        pipeline's component keys, every tenant tier (checked at
+        construction), and the router (``repro.serve.router.ROUTERS``,
+        deferred import — serve sits above this package)."""
+        for p in self.pipelines:
+            p.validate()
+        from repro.serve.router import ROUTERS
+        ROUTERS.get(self.router)
+        return self
+
+
 # ------------------------------------------------- paper variants -------
 
 def elite_spec(n_classes: int = 40, **overrides) -> PipelineSpec:

@@ -1,0 +1,124 @@
+"""Admission control: typed load-shedding for the pipeline fleet.
+
+A production front door refuses work it cannot serve in time; an
+accepted-then-late answer is worse than an honest rejection the client
+can retry elsewhere.  :class:`AdmissionController` makes that decision
+*before* a request enters a replica's queue, from two bounds declared
+on the :class:`~repro.api.spec.TenantSpec`:
+
+* ``max_inflight`` — a hard per-tenant cap on unresolved requests (the
+  bulkhead: one tenant's burst cannot queue out everyone else).
+* ``slo_ms`` — the latency objective, checked against what the
+  replica's *calibrated* cost model (``POLICIES["cost"]``) says the
+  queue ahead of this request costs to drain.  An uncalibrated or
+  fixed-model policy predicts nothing, so only the inflight cap sheds
+  (admission never guesses).
+
+A shed raises :class:`Overloaded` — a typed rejection carrying the
+tenant, replica, queue state and the estimate that tripped it — and
+the request never enters a queue: no future is created, nothing can
+hang, and exactly-once delivery of *admitted* requests is untouched.
+
+Determinism contract: :meth:`AdmissionController.check` is a pure
+function of its arguments (queue snapshot + policy state); it reads no
+clock, so the virtual-clock harness scripts overload traces exactly.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.api.spec import TenantSpec
+from repro.serve.router import ReplicaView
+
+__all__ = ["Overloaded", "AdmissionController", "estimate_backlog_ms"]
+
+
+class Overloaded(RuntimeError):
+    """A request the fleet refused to queue, with the reason attached.
+
+    Fields:
+      tenant / replica_id: who was refused, where.
+      reason: ``"max_inflight"`` or ``"slo"``.
+      inflight / depth: the tenant's unresolved count and the chosen
+        replica's queue depth at refusal time.
+      estimated_ms / slo_ms: the backlog-drain estimate that exceeded
+        the SLO (``slo`` sheds only; 0 otherwise).
+    """
+
+    def __init__(self, tenant: str, replica_id: int, reason: str, *,
+                 inflight: int = 0, depth: int = 0,
+                 estimated_ms: float = 0.0, slo_ms: float = 0.0,
+                 limit: int = 0):
+        self.tenant = tenant
+        self.replica_id = replica_id
+        self.reason = reason
+        self.inflight = inflight
+        self.depth = depth
+        self.estimated_ms = estimated_ms
+        self.slo_ms = slo_ms
+        self.limit = limit
+        if reason == "max_inflight":
+            msg = (f"tenant {tenant!r} shed: {inflight} requests already "
+                   f"in flight >= max_inflight={limit}")
+        else:
+            msg = (f"tenant {tenant!r} shed at replica {replica_id}: "
+                   f"queue depth {depth} needs ~{estimated_ms:.1f} ms to "
+                   f"drain, over the {slo_ms:g} ms SLO")
+        super().__init__(msg)
+
+
+def estimate_backlog_ms(policy, depth: int, max_batch: int
+                        ) -> Optional[float]:
+    """What the replica's policy predicts it costs to serve a queue of
+    ``depth`` requests (the arriving one included), in ms.
+
+    Uses the cost model's dispatch-size-aware ``estimate_ms`` when
+    calibrated — ``depth`` requests drain in ``ceil(depth/max_batch)``
+    dispatches, full ones first.  Returns None when the policy carries
+    no calibrated model (fixed/deadline, or cost before its first
+    window): admission then has nothing to check the SLO against.
+    """
+    estimate = getattr(policy, "estimate_ms", None)
+    if estimate is None or not getattr(policy, "calibrated", False):
+        return None
+    if depth <= 0:
+        return 0.0
+    full, tail = divmod(depth, max_batch)
+    total = full * estimate(max_batch)
+    if tail:
+        total += estimate(tail)
+    return total
+
+
+class AdmissionController:
+    """Stateless admission check (all state arrives as arguments).
+
+    One controller serves the whole fleet; it exists as an object so a
+    deployment can subclass/replace the policy in one place.
+    """
+
+    def check(self, tenant: TenantSpec, inflight: int,
+              view: ReplicaView, policy) -> None:
+        """Admit or shed one request routed to ``view``.
+
+        Args:
+          tenant: the declarative contract being enforced.
+          inflight: the tenant's current unresolved request count.
+          view: the chosen replica's queue snapshot.
+          policy: that replica's batch policy (the cost model, when
+            calibrated, prices the backlog).
+
+        Raises :class:`Overloaded`; returns None on admit.
+        """
+        if inflight >= tenant.max_inflight:
+            raise Overloaded(tenant.name, view.replica_id,
+                             "max_inflight", inflight=inflight,
+                             limit=tenant.max_inflight)
+        if tenant.slo_ms > 0:
+            est = estimate_backlog_ms(policy, view.depth + 1,
+                                      view.max_batch)
+            if est is not None and est > tenant.slo_ms:
+                raise Overloaded(tenant.name, view.replica_id, "slo",
+                                 depth=view.depth,
+                                 estimated_ms=est,
+                                 slo_ms=tenant.slo_ms)

@@ -182,11 +182,19 @@ class AsyncPointCloudEngine:
         module docstring for the dispatch-invariance contract).
       clock: monotonic seconds source for request timing and policy
         wait computation — injectable so tests run on a virtual clock.
+      calibrate_every: recalibrate a calibratable policy
+        (``POLICIES["cost"]``) every this many dispatches, from the
+        *sliding window* of measurements since the last calibration —
+        so a long-running ``serve_loop`` tracks service-time drift
+        without anyone calling :meth:`calibrate_policy` by hand
+        (that explicit call remains as a forced refresh).  0 disables
+        the periodic update.
     """
 
     def __init__(self, pipeline: FrozenPipeline, max_batch: int = 8,
                  policy=None, seed: int = 0,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 calibrate_every: int = 64):
         if not isinstance(pipeline, FrozenPipeline):
             raise TypeError(
                 "AsyncPointCloudEngine wraps a FrozenPipeline; build one "
@@ -217,6 +225,13 @@ class AsyncPointCloudEngine:
         self.latencies_ms: collections.deque = collections.deque(
             maxlen=10_000)
         self._clock = clock
+        if not isinstance(calibrate_every, int) or calibrate_every < 0:
+            raise ValueError(f"calibrate_every must be a non-negative "
+                             f"int, got {calibrate_every!r}")
+        self.calibrate_every = calibrate_every
+        # Sliding-window origin for the periodic recalibration: the
+        # (batches, serve_s) reading at the last calibration.
+        self._cal_origin = (0, 0.0)
         # One stream per dispatch lane, sized from max_batch (the old
         # 64-stream floor under-provisioned max_batch > 64).
         self._lfsr0 = pipeline.seed_state(seed, self.max_batch)
@@ -265,6 +280,7 @@ class AsyncPointCloudEngine:
             scheduler (``serve_loop``) never stalls its event loop on
             device compute.
         """
+        self._maybe_recalibrate()
         depth = len(self._queue)
         oldest_wait_ms = 0.0
         if depth:
@@ -298,24 +314,54 @@ class AsyncPointCloudEngine:
 
     def reset_stats(self) -> None:
         """Open a fresh measurement window: zero ``stats`` *and* clear
-        the latency log, so window percentiles never mix eras."""
+        the latency log, so window percentiles never mix eras.  The
+        recalibration window origin resets with it."""
         self.stats.reset()
         self.latencies_ms.clear()
+        self._cal_origin = (0, 0.0)
 
     def calibrate_policy(self) -> bool:
-        """Feed the current stats window to a calibratable policy
-        (``POLICIES["cost"]``): the ``stats.serve_s / stats.batches``
-        per-dispatch average at this engine's ``max_batch``, divided by
-        ``spec.data_shards``, becomes the policy's dispatch-size-aware
-        service estimate.  Returns True when the policy accepted a
-        calibration (False for fixed-model policies or an empty
-        window)."""
+        """Force-refresh a calibratable policy (``POLICIES["cost"]``)
+        from the *cumulative* stats: the ``stats.serve_s /
+        stats.batches`` per-dispatch average at this engine's
+        ``max_batch``, divided by ``spec.data_shards``, becomes the
+        policy's dispatch-size-aware service estimate.  Returns True
+        when the policy accepted a calibration (False for fixed-model
+        policies or an empty window).
+
+        With ``calibrate_every > 0`` this runs periodically on its own
+        inside :meth:`pump` (so ``serve_loop`` self-calibrates from a
+        sliding window of recent dispatches); the explicit call remains
+        as the forced refresh and restarts the periodic window."""
         calibrate = getattr(self.policy, "calibrate", None)
         if calibrate is None or self.stats.batches == 0:
             return False
         calibrate(self.stats, self.max_batch,
                   data_shards=self.spec.data_shards)
+        self._cal_origin = (self.stats.batches, self.stats.serve_s)
         return True
+
+    def _maybe_recalibrate(self) -> None:
+        """The periodic sliding-window update: once ``calibrate_every``
+        dispatches have accrued since the last calibration, fit the
+        policy's cost model from exactly that window (recent drift —
+        thermal, contention, shape changes — shows up; ancient history
+        does not) and restart the window."""
+        if not self.calibrate_every:
+            return
+        calibrate = getattr(self.policy, "calibrate", None)
+        if calibrate is None:
+            return
+        batches0, serve_s0 = self._cal_origin
+        window_batches = self.stats.batches - batches0
+        if window_batches < self.calibrate_every:
+            return
+        window = PointCloudStats()
+        window.batches = window_batches
+        window.serve_s = self.stats.serve_s - serve_s0
+        calibrate(window, self.max_batch,
+                  data_shards=self.spec.data_shards)
+        self._cal_origin = (self.stats.batches, self.stats.serve_s)
 
     def warmup(self) -> float:
         """Compile the one ``(max_batch, n_points)`` executable ahead of

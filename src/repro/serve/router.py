@@ -1,0 +1,97 @@
+"""Replica routing for the pipeline fleet.
+
+A router picks which pool replica serves the next request of a tenant,
+given read-only :class:`ReplicaView` snapshots of every replica in the
+tenant's tier.  Routers live in a :data:`ROUTERS` registry mirroring
+``repro.serve.policy.POLICIES`` — ``FleetSpec.router`` names an entry
+by string key, so a new placement strategy is a registry entry, not a
+new fleet:
+
+    from repro.serve.router import register_router
+
+    @register_router("my-router")
+    def my_router(tenant, candidates, state): ...
+
+Determinism contract (same as the batch policies): a router is a pure
+function of its arguments — the fleet snapshots queue state into the
+views and owns ``state`` (one mutable dict per tenant, for round-robin
+counters and the like); routers never read wall time or RNG.  That is
+what lets the virtual-clock harness script multi-tenant traces and
+assert exact placements.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, MutableMapping, Sequence
+
+from repro.api.registry import Registry
+
+ROUTERS = Registry("router")
+register_router = ROUTERS.register
+
+Router = Callable[[str, Sequence["ReplicaView"], MutableMapping], int]
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaView:
+    """What a router may know about one candidate replica: identity and
+    queue pressure, snapshotted by the fleet at routing time.
+
+    ``pending`` counts requests not yet resolved (queued + in flight on
+    device) — the load signal; ``depth`` counts only queued (not yet
+    dispatched) — the admission signal.
+    """
+    replica_id: int
+    tier: str
+    depth: int
+    pending: int
+    max_batch: int
+
+
+@register_router("least-loaded")
+def least_loaded(tenant: str, candidates: Sequence[ReplicaView],
+                 state: MutableMapping) -> int:
+    """Pick the candidate with the fewest unresolved requests; ties
+    break to the lowest replica id (deterministic)."""
+    best = min(candidates, key=lambda v: (v.pending, v.replica_id))
+    return best.replica_id
+
+
+@register_router("round-robin")
+def round_robin(tenant: str, candidates: Sequence[ReplicaView],
+                state: MutableMapping) -> int:
+    """Cycle the tenant through its candidates in replica-id order,
+    independent of load (the counter lives in the tenant's router
+    state, so two tenants never share a cycle)."""
+    ordered = sorted(v.replica_id for v in candidates)
+    turn = state.get("rr", 0)
+    state["rr"] = turn + 1
+    return ordered[turn % len(ordered)]
+
+
+@register_router("sticky")
+def sticky(tenant: str, candidates: Sequence[ReplicaView],
+           state: MutableMapping) -> int:
+    """Always the lowest-id candidate — one replica per tier takes the
+    whole tenant (the predictable choice for golden-equivalence tests
+    and cache-affinity deployments)."""
+    return min(v.replica_id for v in candidates)
+
+
+def route(router: Router, tenant: str,
+          candidates: Sequence[ReplicaView],
+          state: MutableMapping) -> int:
+    """Run a router and validate its pick is one of the candidates —
+    a plugin returning a foreign replica id is a bug worth naming at
+    the routing site, not a wrong-tenant dispatch three layers down."""
+    if not candidates:
+        raise ValueError(f"tenant {tenant!r} has no candidate replicas "
+                         f"(empty tier) — FleetSpec validation should "
+                         f"have rejected this")
+    pick = router(tenant, candidates, state)
+    if pick not in {v.replica_id for v in candidates}:
+        raise ValueError(
+            f"router returned replica {pick!r} for tenant {tenant!r} "
+            f"but its candidates are "
+            f"{sorted(v.replica_id for v in candidates)}")
+    return pick

@@ -41,7 +41,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro import compat
 from repro.sharding import context
 
-__all__ = ["make_mesh", "shard_forward"]
+__all__ = ["make_mesh", "make_mesh2d", "replica_submesh", "shard_forward"]
 
 
 def make_mesh(data_shards: int) -> Mesh:
@@ -61,7 +61,44 @@ def make_mesh(data_shards: int) -> Mesh:
     return Mesh(np.array(devices[:data_shards]), ("data",))
 
 
-def shard_forward(fwd: Callable, spec) -> Tuple[Callable, Mesh]:
+def make_mesh2d(n_replicas: int, data_shards: int) -> Mesh:
+    """A 2-D ``("replica", "data")`` mesh over the first
+    ``n_replicas * data_shards`` devices — the fleet generalization of
+    :func:`make_mesh`.
+
+    Row ``r`` is replica ``r``'s device set: each pool pipeline is
+    built over its own row (:func:`replica_submesh`), so replicas never
+    contend for a device and the data-parallel dispatch inside one
+    replica stays exactly the 1-D ``("data",)`` split of PR 4.
+    """
+    need = n_replicas * data_shards
+    devices = jax.devices()
+    if need > len(devices):
+        raise ValueError(
+            f"a {n_replicas} x {data_shards} replica x data mesh needs "
+            f"{need} JAX devices but only {len(devices)} are available; "
+            f"on CPU, force host devices with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={need}")
+    grid = np.array(devices[:need]).reshape(n_replicas, data_shards)
+    return Mesh(grid, ("replica", "data"))
+
+
+def replica_submesh(mesh: Mesh, replica: int) -> Mesh:
+    """Row ``replica`` of a 2-D ``("replica", "data")`` mesh as the 1-D
+    ``("data",)`` mesh that replica's pipeline dispatches over."""
+    if tuple(mesh.axis_names) != ("replica", "data"):
+        raise ValueError(
+            f"replica_submesh takes a ('replica', 'data') mesh, got "
+            f"axes {tuple(mesh.axis_names)}")
+    n_replicas = mesh.devices.shape[0]
+    if not 0 <= replica < n_replicas:
+        raise ValueError(f"replica {replica} out of range for a "
+                         f"{n_replicas}-replica mesh")
+    return Mesh(mesh.devices[replica], ("data",))
+
+
+def shard_forward(fwd: Callable, spec,
+                  mesh: Mesh | None = None) -> Tuple[Callable, Mesh]:
     """Wrap a built ``fwd(params, pts, lfsr)`` in a data-parallel
     ``shard_map`` dispatch over ``spec.data_shards`` devices.
 
@@ -71,6 +108,12 @@ def shard_forward(fwd: Callable, spec) -> Tuple[Callable, Mesh]:
     (``jax.jit`` surfaces them on the first call of a new shape):
     the batch must divide ``data_shards``, and per-lane URS needs one
     stream per lane.
+
+    Args:
+      mesh: a pre-built 1-D ``("data",)`` mesh to dispatch over —
+        fleet placement passes a :func:`replica_submesh` row here so
+        each pool replica owns its device set; None builds the default
+        first-devices mesh.  Must match ``spec.data_shards``.
     """
     if not spec.per_sample_norm:
         raise ValueError(
@@ -79,7 +122,15 @@ def shard_forward(fwd: Callable, spec) -> Tuple[Callable, Mesh]:
             "batch-statistic normalization couples lanes across the "
             "whole dispatch, so a device-split batch would silently "
             "compute shard-local statistics and change results")
-    mesh = make_mesh(spec.data_shards)
+    if mesh is None:
+        mesh = make_mesh(spec.data_shards)
+    elif (tuple(mesh.axis_names) != ("data",)
+            or mesh.devices.shape != (spec.data_shards,)):
+        raise ValueError(
+            f"shard_forward needs a 1-D ('data',) mesh of exactly "
+            f"data_shards={spec.data_shards} devices; got axes "
+            f"{tuple(mesh.axis_names)} shape {mesh.devices.shape} "
+            f"(build replica rows with replica_submesh(make_mesh2d(...)))")
     lfsr_spec = P() if spec.shared_urs else P("data")
     sharded = compat.shard_map(
         fwd, mesh, in_specs=(P(), P("data"), lfsr_spec),

@@ -18,6 +18,7 @@ regression gate all consume the same run):
     estimated_sps   num?  static roofline estimate (repro.roofline)
     measured_sps    num?  measured samples/sec (None = estimate-only)
     err_vs_fp32     num?  accuracy proxy vs the fp32-ref anchor
+    shed_rate       num?  fleet rows: shed fraction of offered requests
     frontier        bool  row is on the measured Pareto frontier
     anchor          bool  row is the fp32-ref reference point
     spec            dict? searched spec fields (human provenance)
@@ -39,7 +40,7 @@ from typing import Any, Dict, List, Optional
 SCHEMA = "repro.bench/v1"
 
 _NUMERIC_KEYS = ("us_per_call", "estimated_sps", "measured_sps",
-                 "err_vs_fp32")
+                 "err_vs_fp32", "shed_rate")
 _BOOL_KEYS = ("frontier", "anchor")
 
 
@@ -54,6 +55,7 @@ def new_row(name: str, *, fingerprint: Optional[str] = None,
             estimated_sps: Optional[float] = None,
             measured_sps: Optional[float] = None,
             err_vs_fp32: Optional[float] = None,
+            shed_rate: Optional[float] = None,
             frontier: bool = False, anchor: bool = False,
             spec: Optional[Dict[str, Any]] = None,
             stages: Optional[List[Dict[str, Any]]] = None) -> Dict[str, Any]:
@@ -61,8 +63,9 @@ def new_row(name: str, *, fingerprint: Optional[str] = None,
     return {"name": name, "fingerprint": fingerprint,
             "us_per_call": us_per_call, "derived": derived,
             "estimated_sps": estimated_sps, "measured_sps": measured_sps,
-            "err_vs_fp32": err_vs_fp32, "frontier": bool(frontier),
-            "anchor": bool(anchor), "spec": spec, "stages": stages}
+            "err_vs_fp32": err_vs_fp32, "shed_rate": shed_rate,
+            "frontier": bool(frontier), "anchor": bool(anchor),
+            "spec": spec, "stages": stages}
 
 
 def resolve_rev() -> str:

@@ -59,6 +59,30 @@ def clouds(tiny_spec):
 
 
 @pytest.fixture(scope="session")
+def fleet_spec(tiny_spec):
+    """Two-tier pool (same tiny model under two names, so tier routing
+    is exercised while golden logits stay comparable), two replicas
+    each, two tenants with SLO shedding off (``slo_ms=0``) so default
+    traces never shed."""
+    from repro.api import FleetSpec, TenantSpec
+    return FleetSpec(
+        pipelines=(tiny_spec, tiny_serving_spec(name="tiny-b")),
+        tenants=(TenantSpec("rt", tiny_spec.name, slo_ms=0.0),
+                 TenantSpec("bulk", "tiny-b", slo_ms=0.0)),
+        replicas=2, max_batch=4)
+
+
+@pytest.fixture(scope="session")
+def fleet_pool(fleet_spec, tiny_params):
+    """The built pool, compiled once per session; tests construct
+    cheap per-test ``PipelineFleet``s over it (fresh engines, shared
+    executables)."""
+    from repro.api.build import build_pool
+    params = {p.name: tiny_params for p in fleet_spec.pipelines}
+    return build_pool(fleet_spec.pool_specs(), params)
+
+
+@pytest.fixture(scope="session")
 def solo_reference(tiny_pipeline):
     """``ref(cloud, max_batch) -> [n_classes]`` — the solo-run logits a
     request must reproduce bit-identically no matter how the async

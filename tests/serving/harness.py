@@ -15,7 +15,7 @@ Reused by every module under ``tests/serving``.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 SEED = 7
 TINY = dict(n_points=128, embed_dim=16, k_neighbors=8)
@@ -52,9 +52,11 @@ class VirtualClock:
 @dataclasses.dataclass(frozen=True)
 class Arrival:
     """One scripted request: ``cloud`` arrives at ``t_ms`` on the
-    virtual clock."""
+    virtual clock.  ``tenant`` names the submitting tenant for fleet
+    traces (None for single-engine traces)."""
     t_ms: float
     cloud: object          # [N, 3] point cloud
+    tenant: Optional[str] = None
 
 
 def bursty_trace(clouds: Sequence, burst: int = 4,
@@ -111,3 +113,90 @@ def run_trace(engine, trace: Sequence[Arrival], clock: VirtualClock,
     if flush:
         engine.flush()
     return futures
+
+
+# ---------------------------------------------------------------------------
+# multi-tenant fleet traces
+# ---------------------------------------------------------------------------
+
+def interleave_traces(per_tenant: Dict[str, Sequence[Arrival]]
+                      ) -> List[Arrival]:
+    """Merge per-tenant arrival lists into one trace, tagging each
+    arrival with its tenant and sorting by time (ties keep tenant-name
+    order, so the merge is deterministic)."""
+    merged = [dataclasses.replace(a, tenant=name)
+              for name in sorted(per_tenant)
+              for a in per_tenant[name]]
+    return sorted(merged, key=lambda a: (a.t_ms, a.tenant))
+
+
+def fleet_steady_trace(clouds_by_tenant: Dict[str, Sequence],
+                       gap_ms: float = 5.0,
+                       stagger_ms: float = 2.0) -> List[Arrival]:
+    """Every tenant submits at a steady rate, offset from each other by
+    ``stagger_ms`` — the mixed-SLO background-load case."""
+    return interleave_traces({
+        name: steady_trace(clouds, gap_ms=gap_ms,
+                           start_ms=i * stagger_ms)
+        for i, (name, clouds) in
+        enumerate(sorted(clouds_by_tenant.items()))})
+
+
+def fleet_bursty_trace(clouds_by_tenant: Dict[str, Sequence],
+                       burst: int = 4,
+                       burst_gap_ms: float = 50.0) -> List[Arrival]:
+    """Every tenant bursts simultaneously — contention for replicas at
+    each burst instant (the router/queue-pressure stress case)."""
+    return interleave_traces({
+        name: bursty_trace(clouds, burst=burst,
+                           burst_gap_ms=burst_gap_ms)
+        for name, clouds in clouds_by_tenant.items()})
+
+
+def fleet_overload_trace(clouds_by_tenant: Dict[str, Sequence],
+                         repeat: int = 4) -> List[Arrival]:
+    """Every tenant fires all of its clouds ``repeat`` times at t=0 —
+    far beyond any reasonable ``max_inflight``, guaranteeing admission
+    control sheds (the load-shedding acceptance case)."""
+    return interleave_traces({
+        name: [Arrival(0.0, c) for _ in range(repeat) for c in clouds]
+        for name, clouds in clouds_by_tenant.items()})
+
+
+def run_fleet_trace(fleet, trace: Sequence[Arrival],
+                    clock: VirtualClock, tick_ms: float = 1.0,
+                    drain_ms: float = 500.0, flush: bool = True
+                    ) -> Tuple[List[Tuple[Arrival, object]],
+                               List[Tuple[Arrival, Exception]]]:
+    """Drive a :class:`~repro.serve.fleet.PipelineFleet` through a
+    scripted multi-tenant trace, deterministically and without sleeps.
+
+    Same clock discipline as :func:`run_trace`; each arrival is routed
+    via ``fleet.submit(arrival.tenant, arrival.cloud)``.  A shed
+    request (typed :class:`~repro.serve.admission.Overloaded`) is
+    recorded, not raised — overload traces are the point.
+
+    Returns ``(admitted, shed)``: admitted as ``(arrival, future)``
+    pairs in submission order, shed as ``(arrival, exc)`` pairs.
+    """
+    from repro.serve.admission import Overloaded
+    admitted, shed = [], []
+    for arrival in sorted(trace, key=lambda a: a.t_ms):
+        target_s = arrival.t_ms / 1e3
+        assert target_s >= clock(), "trace arrivals must not precede clock"
+        while clock() < target_s:
+            clock.advance(min(tick_ms / 1e3, target_s - clock()))
+            fleet.pump(block=False)
+        try:
+            admitted.append((arrival,
+                             fleet.submit(arrival.tenant, arrival.cloud)))
+        except Overloaded as exc:
+            shed.append((arrival, exc))
+        fleet.pump(block=False)
+    deadline_s = clock() + drain_ms / 1e3
+    while fleet.pending and clock() < deadline_s:
+        clock.advance(tick_ms / 1e3)
+        fleet.pump(block=False)
+    if flush:
+        fleet.flush()
+    return admitted, shed

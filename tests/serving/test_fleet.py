@@ -1,0 +1,457 @@
+"""Fleet serving: FleetSpec/TenantSpec validation, pool building with
+shared frozen structure, 2-D replica x data mesh placement, tenant
+routing, typed admission control, and the acceptance-criteria golden
+equivalence — per-tenant logits through the fleet are bit-identical to
+solo serving, on one device and on the forced-8-device 2x4 mesh.
+
+All traces run on the virtual clock (zero sleeps).
+"""
+import jax
+import numpy as np
+import pytest
+from harness import (SEED, VirtualClock, fleet_bursty_trace,
+                     fleet_overload_trace, fleet_steady_trace,
+                     run_fleet_trace, tiny_serving_spec)
+
+from repro.api import FleetSpec, TenantSpec, build_pool
+from repro.serve.admission import (AdmissionController, Overloaded,
+                                   estimate_backlog_ms)
+from repro.serve.fleet import PipelineFleet
+from repro.serve.router import ROUTERS, ReplicaView, route
+from repro.serve.sharding import make_mesh2d, replica_submesh
+
+
+def make_fleet(pool, spec, **kw):
+    kw.setdefault("seed", SEED)
+    return PipelineFleet(pool, spec, **kw)
+
+
+# ---------------------------------------------------------------------------
+# declarative layer
+# ---------------------------------------------------------------------------
+
+class TestSpecs:
+    def test_tenant_spec_validates(self):
+        with pytest.raises(ValueError, match="non-empty"):
+            TenantSpec("", "tier")
+        with pytest.raises(ValueError, match="slo_ms"):
+            TenantSpec("t", "tier", slo_ms=-1.0)
+        with pytest.raises(ValueError, match="max_inflight"):
+            TenantSpec("t", "tier", max_inflight=0)
+
+    def test_fleet_spec_rejects_bad_pools(self, tiny_spec):
+        with pytest.raises(ValueError, match="at least one pipeline"):
+            FleetSpec(pipelines=())
+        with pytest.raises(ValueError, match="unique"):
+            FleetSpec(pipelines=(tiny_spec, tiny_spec))
+        with pytest.raises(ValueError, match="agree on data_shards"):
+            FleetSpec(pipelines=(
+                tiny_spec,
+                tiny_serving_spec(name="tiny-b", data_shards=2)),
+                max_batch=4)
+        with pytest.raises(ValueError, match="divide"):
+            FleetSpec(pipelines=(
+                tiny_serving_spec(name="s2", data_shards=2),),
+                max_batch=3)
+
+    def test_fleet_spec_rejects_unknown_tier(self, tiny_spec):
+        with pytest.raises(ValueError, match="names tier"):
+            FleetSpec(pipelines=(tiny_spec,),
+                      tenants=(TenantSpec("t", "no-such-tier"),))
+
+    def test_fleet_spec_rejects_duplicate_tenants(self, tiny_spec):
+        with pytest.raises(ValueError, match="tenant names"):
+            FleetSpec(pipelines=(tiny_spec,),
+                      tenants=(TenantSpec("t", tiny_spec.name),
+                               TenantSpec("t", tiny_spec.name)))
+
+    def test_validate_resolves_router_key(self, tiny_spec):
+        spec = FleetSpec(pipelines=(tiny_spec,), router="no-such-router")
+        with pytest.raises(KeyError, match="no-such-router"):
+            spec.validate()
+
+    def test_pool_specs_mesh_row_order(self, fleet_spec):
+        names = [s.name for s in fleet_spec.pool_specs()]
+        tiers = [p.name for p in fleet_spec.pipelines]
+        assert names == tiers * fleet_spec.replicas
+
+    def test_tier_of(self, fleet_spec):
+        assert fleet_spec.tier_of("bulk").name == "tiny-b"
+        with pytest.raises(KeyError, match="unknown tenant"):
+            fleet_spec.tier_of("nobody")
+
+
+# ---------------------------------------------------------------------------
+# pool building
+# ---------------------------------------------------------------------------
+
+class TestBuildPool:
+    def test_replicas_share_unsharded_pipeline(self, fleet_spec,
+                                               fleet_pool):
+        # replica r of pipeline i sits at index r*len(pipelines)+i and
+        # shares the frozen pipeline (one jit cache per distinct spec)
+        n = len(fleet_spec.pipelines)
+        assert fleet_pool[0] is fleet_pool[n]
+        assert fleet_pool[1] is fleet_pool[n + 1]
+        assert fleet_pool[0] is not fleet_pool[1]
+
+    def test_missing_params_is_typed(self, fleet_spec, tiny_params):
+        with pytest.raises(KeyError, match="tiny-b"):
+            build_pool(fleet_spec.pool_specs(),
+                       {fleet_spec.pipelines[0].name: tiny_params})
+
+    def test_mesh_rejected_for_unsharded_pool(self, fleet_spec,
+                                              tiny_params):
+        params = {p.name: tiny_params for p in fleet_spec.pipelines}
+        with pytest.raises(ValueError, match="mesh"):
+            build_pool(fleet_spec.pool_specs(), params, mesh=object())
+
+
+# ---------------------------------------------------------------------------
+# 2-D mesh
+# ---------------------------------------------------------------------------
+
+class TestMesh2D:
+    def test_too_few_devices_raises_with_recipe(self):
+        need = jax.device_count() + 1
+        with pytest.raises(ValueError, match="xla_force_host_platform"):
+            make_mesh2d(need, 1)
+
+    @pytest.mark.skipif(jax.device_count() < 8,
+                        reason="needs 8 devices "
+                               "(XLA_FLAGS=--xla_force_host_platform"
+                               "_device_count=8)")
+    def test_mesh_and_submeshes(self):
+        mesh = make_mesh2d(2, 4)
+        assert mesh.axis_names == ("replica", "data")
+        assert mesh.devices.shape == (2, 4)
+        for r in range(2):
+            sub = replica_submesh(mesh, r)
+            assert sub.axis_names == ("data",)
+            assert [d.id for d in sub.devices.flat] == \
+                [d.id for d in mesh.devices[r]]
+        with pytest.raises(ValueError, match="replica"):
+            replica_submesh(mesh, 2)
+
+
+# ---------------------------------------------------------------------------
+# routers
+# ---------------------------------------------------------------------------
+
+def _view(rid, pending=0, depth=0):
+    return ReplicaView(replica_id=rid, tier="t", depth=depth,
+                       pending=pending, max_batch=4)
+
+
+class TestRouters:
+    def test_least_loaded_prefers_idle(self):
+        router = ROUTERS.get("least-loaded")
+        assert router("t", [_view(0, pending=3), _view(1, pending=1)],
+                      {}) == 1
+        # ties break to the lowest replica id
+        assert router("t", [_view(1), _view(0)], {}) == 0
+
+    def test_round_robin_cycles_per_tenant(self):
+        router = ROUTERS.get("round-robin")
+        state_a, state_b = {}, {}
+        views = [_view(0), _view(1)]
+        picks = [router("a", views, state_a) for _ in range(4)]
+        assert picks == [0, 1, 0, 1]
+        # another tenant owns its own cycle
+        assert router("b", views, state_b) == 0
+
+    def test_sticky_pins_lowest_id(self):
+        router = ROUTERS.get("sticky")
+        assert router("t", [_view(2, pending=9), _view(1)], {}) == 1
+
+    def test_route_validates_pick(self):
+        with pytest.raises(ValueError, match="no candidate"):
+            route(ROUTERS.get("sticky"), "t", [], {})
+        with pytest.raises(ValueError, match="candidates"):
+            route(lambda t, c, s: 99, "t", [_view(0)], {})
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+
+class _StubCost:
+    """A calibrated cost model predicting ``ms_per_req`` per lane."""
+
+    def __init__(self, ms_per_req=10.0):
+        self.ms = ms_per_req
+        self.calibrated = True
+
+    def estimate_ms(self, n):
+        return self.ms * n
+
+
+class TestAdmission:
+    def test_backlog_estimate_needs_calibration(self):
+        class Fixed:                      # no estimate_ms at all
+            pass
+
+        uncal = _StubCost()
+        uncal.calibrated = False
+        assert estimate_backlog_ms(Fixed(), 5, 4) is None
+        assert estimate_backlog_ms(uncal, 5, 4) is None
+
+    def test_backlog_estimate_splits_full_and_tail(self):
+        # 6 requests at max_batch=4: one full dispatch + one of 2
+        assert estimate_backlog_ms(_StubCost(10.0), 6, 4) == \
+            10.0 * 4 + 10.0 * 2
+        assert estimate_backlog_ms(_StubCost(10.0), 0, 4) == 0.0
+
+    def test_check_sheds_on_inflight_then_slo(self):
+        ctl = AdmissionController()
+        tenant = TenantSpec("t", "tier", slo_ms=15.0, max_inflight=2)
+        with pytest.raises(Overloaded) as exc:
+            ctl.check(tenant, 2, _view(0), _StubCost())
+        assert exc.value.reason == "max_inflight"
+        # depth 1 -> 2 requests at 10ms each = 20ms > 15ms SLO
+        with pytest.raises(Overloaded) as exc:
+            ctl.check(tenant, 0, _view(0, depth=1), _StubCost(10.0))
+        assert exc.value.reason == "slo"
+        assert exc.value.estimated_ms == 20.0
+        # admitted: under both bounds
+        ctl.check(tenant, 1, _view(0, depth=0), _StubCost(5.0))
+
+    def test_slo_zero_disables_slo_shedding(self):
+        ctl = AdmissionController()
+        tenant = TenantSpec("t", "tier", slo_ms=0.0, max_inflight=2)
+        ctl.check(tenant, 0, _view(0, depth=100), _StubCost(10.0))
+
+
+# ---------------------------------------------------------------------------
+# fleet behaviour (virtual clock, zero sleeps)
+# ---------------------------------------------------------------------------
+
+class TestFleet:
+    def test_unknown_tenant_lists_registered(self, fleet_pool,
+                                             fleet_spec, clouds):
+        fleet = make_fleet(fleet_pool, fleet_spec, clock=VirtualClock())
+        with pytest.raises(KeyError, match="bulk, rt"):
+            fleet.submit("nobody", clouds[0])
+
+    def test_pool_order_mismatch_rejected(self, fleet_pool, fleet_spec):
+        with pytest.raises(ValueError, match="pool order"):
+            PipelineFleet(list(reversed(fleet_pool)), fleet_spec)
+        with pytest.raises(ValueError, match="replicas"):
+            PipelineFleet(fleet_pool[:1], fleet_spec)
+
+    @pytest.mark.parametrize("router", sorted(ROUTERS.names()))
+    def test_golden_equivalence_steady(self, fleet_pool, fleet_spec,
+                                       clouds, solo_reference, router):
+        """Acceptance: per-tenant logits through the fleet ==
+        bit-identical solo serving, whatever the router."""
+        clock = VirtualClock()
+        fleet = make_fleet(fleet_pool, fleet_spec.replace(router=router),
+                           clock=clock)
+        trace = fleet_steady_trace({"rt": clouds[:5], "bulk": clouds[5:]},
+                                   gap_ms=4.0)
+        admitted, shed = run_fleet_trace(fleet, trace, clock)
+        assert not shed and len(admitted) == len(clouds)
+        assert fleet.pending == 0
+        for arrival, fut in admitted:
+            np.testing.assert_array_equal(
+                np.asarray(fut.result()),
+                solo_reference(arrival.cloud, fleet_spec.max_batch))
+
+    def test_golden_equivalence_bursty(self, fleet_pool, fleet_spec,
+                                       clouds, solo_reference):
+        clock = VirtualClock()
+        fleet = make_fleet(fleet_pool, fleet_spec, clock=clock)
+        trace = fleet_bursty_trace({"rt": clouds[:6], "bulk": clouds[6:]},
+                                   burst=3)
+        admitted, shed = run_fleet_trace(fleet, trace, clock)
+        assert not shed
+        for arrival, fut in admitted:
+            np.testing.assert_array_equal(
+                np.asarray(fut.result()),
+                solo_reference(arrival.cloud, fleet_spec.max_batch))
+
+    def test_overload_sheds_typed_and_never_hangs(self, fleet_pool,
+                                                  fleet_spec, clouds,
+                                                  solo_reference):
+        """Acceptance: overload traces shed typed rejections; admitted
+        requests all resolve (no hangs, no wrong-tenant answers)."""
+        clock = VirtualClock()
+        spec = fleet_spec.replace(tenants=(
+            TenantSpec("rt", fleet_spec.pipelines[0].name,
+                       slo_ms=0.0, max_inflight=3),
+            TenantSpec("bulk", "tiny-b", slo_ms=0.0, max_inflight=5)))
+        fleet = make_fleet(fleet_pool, spec, clock=clock)
+        trace = fleet_overload_trace({"rt": clouds[:4], "bulk": clouds[4:8]},
+                                     repeat=3)
+        admitted, shed = run_fleet_trace(fleet, trace, clock)
+        assert len(admitted) + len(shed) == len(trace)
+        assert shed, "overload trace must shed"
+        for arrival, exc in shed:
+            assert isinstance(exc, Overloaded)
+            assert exc.reason == "max_inflight"
+            assert exc.tenant == arrival.tenant
+        # the bulkhead is per-tenant: each tenant admitted exactly its cap
+        by_tenant = {"rt": 0, "bulk": 0}
+        for arrival, _ in admitted:
+            by_tenant[arrival.tenant] += 1
+        assert by_tenant == {"rt": 3, "bulk": 5}
+        assert fleet.pending == 0
+        for arrival, fut in admitted:     # answers stay per-tenant solo
+            np.testing.assert_array_equal(
+                np.asarray(fut.result()),
+                solo_reference(arrival.cloud, spec.max_batch))
+        tstats = fleet.tenant_stats()
+        assert tstats["rt"]["shed"] == 4 * 3 - 3
+        assert tstats["rt"]["shed_rate"] == pytest.approx(9 / 12)
+        assert tstats["rt"]["p99_ms"] is not None
+        assert fleet.stats()["shed"] == len(shed)
+
+    def test_slo_shed_with_calibrated_cost_model(self, fleet_pool,
+                                                 fleet_spec, clouds):
+        """With a calibrated cost model pricing the backlog, a tight
+        SLO sheds before queueing — typed, with the estimate attached."""
+        clock = VirtualClock()
+        spec = fleet_spec.replace(
+            router="sticky",
+            tenants=(TenantSpec("rt", fleet_spec.pipelines[0].name,
+                                slo_ms=15.0),))
+        fleet = make_fleet(fleet_pool, spec, clock=clock)
+        for rep in fleet.replicas:        # calibrated: 10 ms per request
+            rep.engine.policy = _StubCost(10.0)
+            rep.engine.policy.decide = lambda **kw: 0   # hold the queue
+        fut = fleet.submit("rt", clouds[0])   # est 10ms <= 15ms: admitted
+        with pytest.raises(Overloaded) as exc:
+            fleet.submit("rt", clouds[1])     # est 20ms > 15ms: shed
+        assert exc.value.reason == "slo"
+        assert exc.value.estimated_ms == pytest.approx(20.0)
+        assert fleet.tenants["rt"].shed == 1
+        fleet.flush()
+        assert fut.done()
+
+    def test_least_loaded_spreads_a_burst(self, fleet_pool, fleet_spec,
+                                          clouds):
+        clock = VirtualClock()
+        fleet = make_fleet(fleet_pool, fleet_spec, clock=clock)
+        for c in clouds[:4]:              # no pumping between submits
+            fleet.submit("rt", c)
+        tier = fleet_spec.pipelines[0].name
+        pendings = [r.engine.pending for r in fleet.replicas
+                    if r.tier == tier]
+        assert pendings == [2, 2]         # spread, not piled on one
+        fleet.flush()
+
+    def test_reset_stats_clears_tenants(self, fleet_pool, fleet_spec,
+                                        clouds):
+        clock = VirtualClock()
+        fleet = make_fleet(fleet_pool, fleet_spec, clock=clock)
+        fleet.submit("rt", clouds[0])
+        fleet.flush()
+        fleet.reset_stats()
+        assert fleet.stats()["requests"] == 0
+        assert fleet.tenant_stats()["rt"]["submitted"] == 0
+        assert fleet.tenant_stats()["rt"]["p50_ms"] is None
+
+    def test_describe_names_everything(self, fleet_pool, fleet_spec):
+        text = make_fleet(fleet_pool, fleet_spec).describe()
+        for needle in ("tiny-b", "rt", "bulk", "least-loaded"):
+            assert needle in text
+
+
+# ---------------------------------------------------------------------------
+# periodic recalibration (sliding window)
+# ---------------------------------------------------------------------------
+
+class TestPeriodicRecalibration:
+    def _engine(self, tiny_pipeline, every):
+        from repro.serve.async_engine import AsyncPointCloudEngine
+        return AsyncPointCloudEngine(
+            tiny_pipeline, max_batch=2, policy="cost", seed=SEED,
+            clock=VirtualClock(), calibrate_every=every)
+
+    def test_pump_recalibrates_after_window(self, tiny_pipeline, clouds):
+        eng = self._engine(tiny_pipeline, every=2)
+        assert not eng.policy.calibrated
+        for c in clouds[:4]:
+            eng.submit(c)
+        while eng.pending:                # 2 dispatches, then the
+            eng.pump()                    # window triggers on pump
+        eng.pump()
+        assert eng.policy.calibrated
+        assert eng._cal_origin[0] == eng.stats.batches
+
+    def test_zero_disables_periodic(self, tiny_pipeline, clouds):
+        eng = self._engine(tiny_pipeline, every=0)
+        for c in clouds[:4]:
+            eng.submit(c)
+        eng.flush()
+        eng.pump()
+        assert not eng.policy.calibrated
+        # the explicit call remains the forced refresh
+        assert eng.calibrate_policy()
+        assert eng.policy.calibrated
+
+    def test_window_is_sliding_not_cumulative(self, tiny_pipeline,
+                                              clouds):
+        eng = self._engine(tiny_pipeline, every=2)
+        for c in clouds[:4]:
+            eng.submit(c)
+        while eng.pending:
+            eng.pump()
+        eng.pump()
+        origin0 = eng._cal_origin
+        assert origin0[0] == 2
+        for c in clouds[:4]:              # one more full window
+            eng.submit(c)
+        while eng.pending:
+            eng.pump()
+        eng.pump()
+        assert eng._cal_origin[0] == 4
+        assert eng._cal_origin != origin0
+
+    def test_fleet_calibrate_forces_refresh(self, fleet_pool, fleet_spec,
+                                            clouds):
+        clock = VirtualClock()
+        fleet = make_fleet(fleet_pool, fleet_spec, clock=clock)
+        for c in clouds[:8]:
+            fleet.submit("rt", c)
+            fleet.submit("bulk", c)
+        fleet.flush()
+        # fixed-policy engines have no cost model: refresh accepts 0
+        assert fleet.calibrate() == 0
+
+
+# ---------------------------------------------------------------------------
+# the 2x4 mesh acceptance test (forced-8-device CI step)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs 8 devices (XLA_FLAGS=--xla_force_host"
+                           "_platform_device_count=8)")
+class TestShardedFleet:
+    def test_replica2_data4_matches_solo_unsharded(self, tiny_params,
+                                                   clouds,
+                                                   solo_reference):
+        """Acceptance: a replicas=2 x data_shards=4 fleet on the forced
+        8-device mesh answers bit-identically, per tenant, to solo
+        serving with data_shards=1."""
+        spec4 = tiny_serving_spec(name="tiny-s4", data_shards=4)
+        fspec = FleetSpec(
+            pipelines=(spec4,),
+            tenants=(TenantSpec("rt", "tiny-s4", slo_ms=0.0),
+                     TenantSpec("bulk", "tiny-s4", slo_ms=0.0)),
+            replicas=2, max_batch=4)
+        clock = VirtualClock()
+        fleet = PipelineFleet.from_specs(
+            fspec, {"tiny-s4": tiny_params}, seed=SEED, clock=clock)
+        # two replicas, disjoint 4-device rows of the 2x4 mesh
+        rows = [[d.id for d in r.engine.pipeline.mesh.devices.flat]
+                for r in fleet.replicas]
+        assert len(rows) == 2 and not (set(rows[0]) & set(rows[1]))
+        trace = fleet_bursty_trace({"rt": clouds[:6], "bulk": clouds[6:]},
+                                   burst=3)
+        admitted, shed = run_fleet_trace(fleet, trace, clock)
+        assert not shed and fleet.pending == 0
+        for arrival, fut in admitted:
+            np.testing.assert_array_equal(
+                np.asarray(fut.result()),
+                solo_reference(arrival.cloud, fspec.max_batch))

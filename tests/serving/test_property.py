@@ -59,3 +59,56 @@ def test_every_request_answered_once_with_solo_logits(
         np.testing.assert_array_equal(
             np.asarray(fut.result()),
             solo_reference(clouds[idx], max_batch))
+
+
+fleet_traces = st.lists(
+    st.tuples(st.floats(min_value=0.0, max_value=60.0),
+              st.integers(min_value=0, max_value=N_CLOUDS - 1),
+              st.sampled_from(["rt", "bulk"])),
+    min_size=1, max_size=10)
+
+
+@settings(max_examples=15, deadline=None,
+          suppress_health_check=[HealthCheck.function_scoped_fixture])
+@given(trace=fleet_traces,
+       router=st.sampled_from(["least-loaded", "round-robin", "sticky"]),
+       max_inflight=st.integers(min_value=1, max_value=4))
+def test_fleet_routing_delivers_exactly_once(
+        fleet_pool, fleet_spec, clouds, solo_reference,
+        trace, router, max_inflight):
+    """For any multi-tenant trace, router, and bulkhead width: every
+    offered request is either admitted (answered exactly once, with
+    the tenant's bit-identical solo logits) or shed with a typed
+    ``Overloaded`` — never both, never dropped, never hung."""
+    from harness import run_fleet_trace
+
+    from repro.serve.fleet import PipelineFleet
+
+    clock = VirtualClock()
+    spec = fleet_spec.replace(
+        router=router,
+        tenants=tuple(
+            t.replace(max_inflight=max_inflight)
+            for t in fleet_spec.tenants))
+    fleet = PipelineFleet(fleet_pool, spec, seed=SEED, clock=clock)
+    arrivals = [Arrival(t_ms, clouds[idx], tenant=tenant)
+                for t_ms, idx, tenant in trace]
+    admitted, shed = run_fleet_trace(fleet, arrivals, clock,
+                                     tick_ms=2.0, drain_ms=100.0)
+
+    # exactly once: offered = admitted + shed, nothing pending, each
+    # admitted future resolved once with a unique request on its engine
+    assert len(admitted) + len(shed) == len(arrivals)
+    assert fleet.pending == 0
+    assert sum(r.engine.stats.requests for r in fleet.replicas) == \
+        len(admitted)
+    assert all(fut.done() for _, fut in admitted)
+    assert fleet.stats()["shed"] == len(shed)
+    for _, exc in shed:
+        assert exc.reason in ("max_inflight", "slo")
+
+    # answer invariance per tenant: bit-identical to solo serving
+    for arrival, fut in admitted:
+        np.testing.assert_array_equal(
+            np.asarray(fut.result()),
+            solo_reference(arrival.cloud, spec.max_batch))

@@ -61,7 +61,13 @@ class TestPointMLP:
     @pytest.mark.slow
     def test_training_reduces_loss(self):
         """A few SGD steps on the synthetic set must reduce loss — the
-        system learns (miniature of the paper's training loop)."""
+        system learns (miniature of the paper's training loop).
+
+        Per-step losses on fresh random batches are too noisy at this
+        scale to compare head vs tail, so the assertion is on the same
+        fixed evaluation set before and after training: cycle two fixed
+        batches with SGD, then require the eval loss to drop.
+        """
         from repro.models.layers import softmax_cross_entropy
         cfg = tiny(PM.pointmlp_lite_config(8)).replace(
             quant=QuantConfig(w_bits=32, a_bits=32))
@@ -77,17 +83,30 @@ class TestPointMLP:
         def step(p, pts, cls, lf):
             (l, (p_new, lf)), g = jax.value_and_grad(
                 loss_fn, has_aux=True)(p, pts, cls, lf)
-            p2 = jax.tree_util.tree_map(lambda a, b: a - 0.02 * b, p, g)
-            # keep refreshed BN stats from p_new where params untouched
+            # apply the update to p_new, keeping the BN stats the
+            # forward pass just refreshed
+            p2 = jax.tree_util.tree_map(
+                lambda a, b: a - 0.02 * b, p_new, g)
             return l, p2, lf
 
-        losses = []
-        for s in range(20):
-            pts, cls = pointclouds.make_batch(jax.random.fold_in(KEY, s),
-                                              cfg.n_points, 16)
-            l, params, lfsr = step(params, pts, cls, lfsr)
-            losses.append(float(l))
-        assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.05, losses
+        @jax.jit
+        def eval_loss(p, pts, cls, lf):
+            logits, _, _ = PM.pointmlp_apply(p, cfg, pts, lf)
+            return softmax_cross_entropy(logits, cls)
+
+        batches = [pointclouds.make_batch(jax.random.fold_in(KEY, s),
+                                          cfg.n_points, 16)
+                   for s in range(2)]
+        eval_pts = jnp.concatenate([b[0] for b in batches])
+        eval_cls = jnp.concatenate([b[1] for b in batches])
+        before = float(eval_loss(params, eval_pts, eval_cls,
+                                 sampling.seed_streams(1, 32)))
+        for s in range(24):
+            pts, cls = batches[s % 2]
+            _, params, lfsr = step(params, pts, cls, lfsr)
+        after = float(eval_loss(params, eval_pts, eval_cls,
+                                sampling.seed_streams(1, 32)))
+        assert after < before - 0.05, (before, after)
 
     def test_compress_pipeline(self):
         """fuse + int8 export: ~4x size cut, logits stay close (Fig. 4)."""

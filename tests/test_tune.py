@@ -294,6 +294,23 @@ class TestBenchDiff:
         _, ok = bd.diff_rows(old, within)
         assert ok == []
 
+    def test_shed_rate_regression_flagged(self):
+        bd = _load_bench_diff()
+
+        def doc(rate, rev):
+            return new_artifact(
+                [new_row("fleet_fixed", measured_sps=100.0,
+                         shed_rate=rate)], rev=rev)
+
+        old = doc(0.10, "aaa")
+        _, ok = bd.diff_rows(old, doc(0.15, "bbb"))     # +0.05 within
+        assert ok == []
+        _, bad = bd.diff_rows(old, doc(0.30, "ccc"))    # +0.20 beyond
+        assert len(bad) == 1 and "shed_rate" in bad[0]
+        # shedding less never regresses
+        _, better = bd.diff_rows(old, doc(0.0, "ddd"))
+        assert better == []
+
     def test_new_and_gone_rows_pass(self):
         bd = _load_bench_diff()
         old, new = self._doc(), self._doc(rev="bbb")
