@@ -35,6 +35,7 @@ _ROWS: list = []
 _SPS_RE = re.compile(r"(?:^|;)SPS=([0-9.eE+-]+)")
 _ERR_RE = re.compile(r"(?:^|;)err_vs_fp32=([0-9.eE+-]+)")
 _SHED_RE = re.compile(r"(?:^|;)shed_rate=([0-9.eE+-]+)")
+_HIT_RE = re.compile(r"(?:^|;)cache_hit_rate=([0-9.eE+-]+)")
 
 
 def _emit(name: str, us: float, derived: str) -> None:
@@ -43,11 +44,13 @@ def _emit(name: str, us: float, derived: str) -> None:
     sps = _SPS_RE.search(derived)
     err = _ERR_RE.search(derived)
     shed = _SHED_RE.search(derived)
+    hit = _HIT_RE.search(derived)
     _ROWS.append(art.new_row(
         name, us_per_call=us, derived=derived,
         measured_sps=float(sps.group(1)) if sps else None,
         err_vs_fp32=float(err.group(1)) if err else None,
-        shed_rate=float(shed.group(1)) if shed else None))
+        shed_rate=float(shed.group(1)) if shed else None,
+        cache_hit_rate=float(hit.group(1)) if hit else None))
 
 
 def bench_kernels() -> None:
@@ -344,6 +347,60 @@ def bench_fleet() -> None:
               f"{waits};SPS={s['samples_per_s']:.1f}")
 
 
+def bench_stream() -> None:
+    """``stream_cold`` / ``stream_cached`` rows: the temporal cache.
+
+    Serves the same 16-frame coherent stream
+    (``pointclouds.make_stream``, per-frame drift well under the cached
+    row's threshold) through a direct
+    :class:`repro.serve.streaming.StreamSession` twice:
+
+    * ``stream_cold``  — drift threshold 0.0, so every frame misses and
+      takes the full recompute path (FPS sampling + kNN every frame);
+    * ``stream_cached`` — threshold 1.0, so all but frame 0 replay the
+      cached FPS indices and neighbor lists (15/16 hit rate).
+
+    The FPS sampler makes the win structural — caching skips its
+    sequential selection loop *and* the kNN searches — while results
+    stay bit-identical to the cold path (the ``tests/serving`` golden
+    contract).  Each row reports SPS and ``cache_hit_rate``; the hit
+    rate is gated by ``scripts/bench_diff.py --hit-tol``.
+    """
+    import jax
+    import numpy as np
+
+    from repro.api import lite_spec
+    from repro.api.build import build
+    from repro.data import pointclouds
+    from repro.models import pointmlp as PM
+    from repro.serve.streaming import StreamSession
+
+    # 256 points (vs the 128-point spec_* rows): enough FPS + kNN work
+    # that the cache win is structural, not noise-bound, on CPU CI.
+    base = lite_spec(pointclouds.N_CLASSES).replace(
+        n_points=256, embed_dim=16, k_neighbors=8, precision="fp32",
+        sampler="fps", stream=True).serving()
+    params = PM.pointmlp_init(jax.random.PRNGKey(0),
+                              base.to_model_config())
+    seq, _ = pointclouds.make_stream(jax.random.PRNGKey(1),
+                                     base.n_points, 16, drift=0.01)
+    frames = [np.asarray(f) for f in seq]
+    for name, thr in (("stream_cold", 0.0), ("stream_cached", 1.0)):
+        pipe = build(base.replace(stream_drift_threshold=thr), params)
+        warm = StreamSession(pipe, seed=0)
+        for f in frames[:2]:         # compile both paths pre-timer
+            warm.infer(f)
+        sess = StreamSession(pipe, seed=0)
+        t0 = time.time()
+        out = [sess.infer(f) for f in frames]
+        jax.block_until_ready(out[-1])
+        us = (time.time() - t0) * 1e6
+        sps = len(frames) / (us / 1e6)
+        _emit(name, us,
+              f"frames={sess.stats.frames};hits={sess.stats.hits};"
+              f"cache_hit_rate={sess.stats.hit_rate:.3f};SPS={sps:.1f}")
+
+
 def bench_serve_pointcloud(quick: bool) -> None:
     from benchmarks import serve_pointcloud
     for name, us, derived in serve_pointcloud.rows(
@@ -450,6 +507,7 @@ def main() -> None:
     bench_spec_sharded()
     bench_spec_async()
     bench_fleet()
+    bench_stream()
     bench_serve_pointcloud(args.quick)
     if not args.quick:
         bench_table1(args.table1_steps)

@@ -2,15 +2,19 @@
 """Diff two ``BENCH_<rev>.json`` perf artifacts (the CI regression gate).
 
     python scripts/bench_diff.py BASELINE.json NEW.json \
-        [--sps-tol 0.25] [--err-tol 0.05] [--shed-tol 0.10]
+        [--sps-tol 0.25] [--err-tol 0.05] [--shed-tol 0.10] \
+        [--hit-tol 0.10]
 
 Matches rows by name, prints a table of measured SPS / err-vs-fp32 /
-shed-rate deltas, and exits non-zero when any tracked row *regresses*:
-measured SPS drops by more than ``--sps-tol`` (fraction of the
-baseline), err-vs-fp32 worsens by more than ``--err-tol`` (absolute),
-or a fleet row's shed rate worsens by more than ``--shed-tol``
-(absolute — admission control shedding more of the same offered load
-is a serving regression, same as a latency cliff).  Rows that
+shed-rate / cache-hit-rate deltas, and exits non-zero when any tracked
+row *regresses*: measured SPS drops by more than ``--sps-tol``
+(fraction of the baseline), err-vs-fp32 worsens by more than
+``--err-tol`` (absolute), a fleet row's shed rate worsens by more than
+``--shed-tol`` (absolute — admission control shedding more of the same
+offered load is a serving regression, same as a latency cliff), or a
+stream row's cache hit rate *drops* by more than ``--hit-tol``
+(absolute — the temporal cache silently missing frames it used to
+replay is a throughput regression even before SPS shows it).  Rows that
 exist on only one side are reported but never fail the gate (specs come
 and go as the search space evolves); estimate-only rows (no measured
 SPS) are skipped.  A malformed or old-schema artifact exits 2 with the
@@ -34,6 +38,7 @@ from repro.tune.artifact import ArtifactError, read_artifact  # noqa: E402
 DEFAULT_SPS_TOL = 0.25
 DEFAULT_ERR_TOL = 0.05
 DEFAULT_SHED_TOL = 0.10
+DEFAULT_HIT_TOL = 0.10
 
 
 def _fmt(v: Optional[float], unit: str = "") -> str:
@@ -45,7 +50,8 @@ def _fmt(v: Optional[float], unit: str = "") -> str:
 def diff_rows(old: Dict[str, Any], new: Dict[str, Any],
               *, sps_tol: float = DEFAULT_SPS_TOL,
               err_tol: float = DEFAULT_ERR_TOL,
-              shed_tol: float = DEFAULT_SHED_TOL
+              shed_tol: float = DEFAULT_SHED_TOL,
+              hit_tol: float = DEFAULT_HIT_TOL
               ) -> Tuple[List[Dict[str, Any]], List[str]]:
     """Compare two validated artifact docs.
 
@@ -67,6 +73,8 @@ def diff_rows(old: Dict[str, Any], new: Dict[str, Any],
                "new_err": n.get("err_vs_fp32") if n else None,
                "old_shed": o.get("shed_rate") if o else None,
                "new_shed": n.get("shed_rate") if n else None,
+               "old_hit": o.get("cache_hit_rate") if o else None,
+               "new_hit": n.get("cache_hit_rate") if n else None,
                "delta_sps_pct": None, "status": "ok"}
         if o is None:
             row["status"] = "new"
@@ -102,17 +110,27 @@ def diff_rows(old: Dict[str, Any], new: Dict[str, Any],
                     f"{row['new_shed']:.3f} (worsened by "
                     f"{row['new_shed'] - row['old_shed']:.3f}, tolerance "
                     f"+{shed_tol:g})")
+            if (row["old_hit"] is not None
+                    and row["new_hit"] is not None
+                    and row["new_hit"] < row["old_hit"] - hit_tol):
+                row["status"] = "REGRESSION"
+                regressions.append(
+                    f"{name}: cache_hit_rate {row['old_hit']:.3f} -> "
+                    f"{row['new_hit']:.3f} (dropped by "
+                    f"{row['old_hit'] - row['new_hit']:.3f}, tolerance "
+                    f"-{hit_tol:g})")
         table.append(row)
     return table, regressions
 
 
 def print_table(table: List[Dict[str, Any]], *, file=sys.stdout) -> None:
     cols = ("name", "old SPS", "new SPS", "dSPS%", "old err", "new err",
-            "old shed", "new shed", "status")
+            "old shed", "new shed", "old hit", "new hit", "status")
     lines = [[r["name"], _fmt(r["old_sps"]), _fmt(r["new_sps"]),
               _fmt(r["delta_sps_pct"]), _fmt(r["old_err"]),
               _fmt(r["new_err"]), _fmt(r.get("old_shed")),
-              _fmt(r.get("new_shed")), r["status"]] for r in table]
+              _fmt(r.get("new_shed")), _fmt(r.get("old_hit")),
+              _fmt(r.get("new_hit")), r["status"]] for r in table]
     widths = [max(len(c), *(len(ln[i]) for ln in lines)) if lines
               else len(c) for i, c in enumerate(cols)]
     def emit(cells):
@@ -137,6 +155,9 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--shed-tol", type=float, default=DEFAULT_SHED_TOL,
                     help="allowed absolute shed_rate worsening per "
                          "fleet row (default %(default)s)")
+    ap.add_argument("--hit-tol", type=float, default=DEFAULT_HIT_TOL,
+                    help="allowed absolute cache_hit_rate drop per "
+                         "stream row (default %(default)s)")
     args = ap.parse_args(argv)
 
     try:
@@ -150,7 +171,8 @@ def main(argv: Optional[List[str]] = None) -> int:
     print(f"new     : {args.new} (rev {new['rev']})")
     table, regressions = diff_rows(old, new, sps_tol=args.sps_tol,
                                    err_tol=args.err_tol,
-                                   shed_tol=args.shed_tol)
+                                   shed_tol=args.shed_tol,
+                                   hit_tol=args.hit_tol)
     print_table(table)
     if regressions:
         print(f"\n{len(regressions)} regression(s) beyond tolerance:")
@@ -159,7 +181,7 @@ def main(argv: Optional[List[str]] = None) -> int:
         return 1
     print("\nzero regressions (tolerances: "
           f"SPS -{args.sps_tol * 100:.0f}%, err +{args.err_tol:g}, "
-          f"shed +{args.shed_tol:g})")
+          f"shed +{args.shed_tol:g}, hit -{args.hit_tol:g})")
     return 0
 
 

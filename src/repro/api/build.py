@@ -74,6 +74,27 @@ def _place(spec: PipelineSpec, frozen: Dict, cfg, plan, *, jit: bool,
             backend=backend, shared_urs=spec.shared_urs,
             per_sample_norm=spec.per_sample_norm, plan=plan)
 
+    fwd_collect = fwd_cached = None
+    if getattr(plan, "stream", False):
+        # Stream specs get two extra executables over the same plan:
+        # the collect pass (cold path + cache pytree out) and the
+        # cached pass (cache pytree in, mapping ops replayed).  The
+        # plain ``fwd`` stays — non-stream requests on a streaming
+        # pipeline serve through it unchanged.
+        def fwd_collect(p, pts, lfsr):
+            return PM.pointmlp_infer_with(
+                p, cfg, pts, lfsr, sampler=sampler, grouper=grouper,
+                backend=backend, shared_urs=spec.shared_urs,
+                per_sample_norm=spec.per_sample_norm, plan=plan,
+                collect_cache=True)
+
+        def fwd_cached(p, pts, lfsr, cache):
+            return PM.pointmlp_infer_with(
+                p, cfg, pts, lfsr, sampler=sampler, grouper=grouper,
+                backend=backend, shared_urs=spec.shared_urs,
+                per_sample_norm=spec.per_sample_norm, plan=plan,
+                mapping_cache=cache)
+
     out_mesh = None
     if spec.data_shards > 1:
         # Shard step: after fuse/quantize, before jit — the frozen
@@ -82,6 +103,11 @@ def _place(spec: PipelineSpec, frozen: Dict, cfg, plan, *, jit: bool,
         # graph (mirrors the policy-registry deferral in spec.validate).
         from repro.serve.sharding import shard_forward
         fwd, out_mesh = shard_forward(fwd, spec, mesh=mesh)
+        if fwd_collect is not None:
+            fwd_collect, _ = shard_forward(fwd_collect, spec, mesh=out_mesh,
+                                           cache_out=True)
+            fwd_cached, _ = shard_forward(fwd_cached, spec, mesh=out_mesh,
+                                          cache_in=True)
     elif mesh is not None:
         raise ValueError(
             "build() was given a placement mesh but spec.data_shards "
@@ -90,8 +116,15 @@ def _place(spec: PipelineSpec, frozen: Dict, cfg, plan, *, jit: bool,
 
     fn = jax.jit(fwd, donate_argnums=(2,) if donate_lfsr else ()) \
         if jit else fwd
+    fn_collect = fn_cached = None
+    if fwd_collect is not None:
+        # No LFSR donation on the stream paths: a frame's dispatch
+        # restarts from the session's seed state, which must survive.
+        fn_collect = jax.jit(fwd_collect) if jit else fwd_collect
+        fn_cached = jax.jit(fwd_cached) if jit else fwd_cached
     return FrozenPipeline(spec=spec, params=frozen, model_config=cfg,
-                          _fn=fn, mesh=out_mesh, plan=plan)
+                          _fn=fn, mesh=out_mesh, plan=plan,
+                          _fn_collect=fn_collect, _fn_cached=fn_cached)
 
 
 def build(spec: PipelineSpec, params: Dict, *, jit: bool = True,
@@ -214,6 +247,15 @@ class FrozenPipeline:
     _fn: Any = dataclasses.field(repr=False)
     mesh: Any = None             # 1-D device mesh (data_shards > 1 only)
     plan: Any = None             # compiled repro.api.plan.StagePlan
+    _fn_collect: Any = dataclasses.field(repr=False, default=None)
+    _fn_cached: Any = dataclasses.field(repr=False, default=None)
+
+    @property
+    def streaming(self) -> bool:
+        """Whether this pipeline was lowered with cache-aware mapping
+        ops (``spec.stream=True``) — i.e. :meth:`infer_collect` /
+        :meth:`infer_cached` are available."""
+        return self._fn_collect is not None
 
     def infer(self, pts: jnp.ndarray,
               lfsr_state: Optional[jnp.ndarray] = None
@@ -236,6 +278,38 @@ class FrozenPipeline:
                 f"stream per lane — size the state from the dispatch "
                 f"batch, e.g. pipeline.seed_state(seed, max_batch)")
         return self._fn(self.params, pts, lfsr_state)
+
+    def _require_streaming(self, what: str) -> None:
+        if self._fn_collect is None:
+            raise ValueError(
+                f"{what} needs a streaming pipeline — build one from a "
+                f"spec with stream=True (e.g. "
+                f"spec.replace(stream=True, stream_drift_threshold=...))")
+
+    def infer_collect(self, pts: jnp.ndarray,
+                      lfsr_state: Optional[jnp.ndarray] = None):
+        """The cold streaming pass: exactly :meth:`infer` (bit-identical
+        logits and state) plus the collected mapping cache pytree
+        ``{"sample": (idx, ...), "nbr": (nbr, ...)[, "up": idx]}``
+        (batch-leading leaves) for a stream session to key future
+        frames off.
+
+        Returns: (logits, advanced LFSR state, cache).
+        """
+        self._require_streaming("infer_collect")
+        return self._fn_collect(self.params, pts, lfsr_state)
+
+    def infer_cached(self, pts: jnp.ndarray,
+                     lfsr_state: Optional[jnp.ndarray],
+                     cache) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+        """The cached streaming pass: mapping ops replay ``cache``
+        (from :meth:`infer_collect`, broadcast to this batch); the
+        arithmetic ops recompute on the frame's actual points.
+
+        Returns: (logits, advanced LFSR state).
+        """
+        self._require_streaming("infer_cached")
+        return self._fn_cached(self.params, pts, lfsr_state, cache)
 
     def seed_state(self, seed: int, n_streams: int = 64) -> jnp.ndarray:
         """Fresh LFSR streams for this pipeline's URS sampler — the

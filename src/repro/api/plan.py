@@ -42,6 +42,7 @@ the dataflow the FPGA pipeline implies.  Fused entries live in the
 from __future__ import annotations
 
 import dataclasses
+import functools
 import hashlib
 import itertools
 import json
@@ -96,17 +97,32 @@ class EmbedOp:
 
 @dataclasses.dataclass(frozen=True)
 class SampleOp:
-    """Pick stage centroids with the resolved sampler (FPS / URS / ...)."""
+    """Pick stage centroids with the resolved sampler (FPS / URS / ...).
+
+    ``cached=True`` (stream lowering) lets the interpreter replay the
+    stage's sampled indices from a stream cache — but only for samplers
+    that do not advance the LFSR state (``advances_state=False``);
+    state-advancing samplers still run so the state walk stays exactly
+    the cold path's.  Either way the op *collects* its indices into the
+    cache on the collect pass.
+    """
     stage: int
     n_samples: int
+    cached: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
 class GroupOp:
     """Build normalized local neighborhoods with the resolved grouper:
-    (xyz, feats, idx) -> (new_xyz, center feats, grouped [B,S,k,2C])."""
+    (xyz, feats, idx) -> (new_xyz, center feats, grouped [B,S,k,2C]).
+
+    ``cached=True`` (stream lowering) splits the grouper into its
+    mapping half (``neighbor_index`` — replayed from the stream cache)
+    and its arithmetic half (``group_with_idx`` — always recomputed).
+    """
     stage: int
     k: int
+    cached: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -151,6 +167,26 @@ class HeadOp:
                                                          default=None)
 
 
+@dataclasses.dataclass(frozen=True)
+class SegHeadOp:
+    """Per-point segmentation head (``spec.head="seg"`` lowering rule).
+
+    Replaces the global ``PoolOp(axis=1)`` + :class:`HeadOp` pair: the
+    global descriptor is max-pooled *inside* the op, the final stage's
+    features are upsampled back to the input resolution by 1-NN
+    interpolation (the mapping op the stream cache can replay), the
+    skip path concatenates ``[embed_feats, upsampled, global]``, and a
+    3-layer per-point classifier emits ``[B, n_points, n_classes]``.
+    ``cached=True`` lets the interpreter replay the upsample index.
+    """
+    fc1: CBROp
+    fc2: CBROp
+    fc3_path: Tuple[Any, ...]
+    fc3_quant: Optional[QuantConfig] = dataclasses.field(compare=False,
+                                                         default=None)
+    cached: bool = False
+
+
 StageOp = Any   # union of the op dataclasses above
 
 
@@ -172,6 +208,8 @@ class StagePlan:
     precision: str                  # embed + head precision
     backend: str                    # embed + head backend key
     fused_group: str = "none"
+    head: str = "cls"               # "cls" | "seg" (SegHeadOp lowering)
+    stream: bool = False            # cache-aware mapping-op variants
 
     # ------------------------------------------------- introspection ----
 
@@ -187,7 +225,7 @@ class StagePlan:
                 out.append(op.cbr)
             elif isinstance(op, ResBlockOp):
                 out.extend((op.net1, op.net2))
-            elif isinstance(op, HeadOp):
+            elif isinstance(op, (HeadOp, SegHeadOp)):
                 out.extend((op.fc1, op.fc2))
         return out
 
@@ -225,8 +263,10 @@ class StagePlan:
                    f"{self.stage_backend[s]}")
             if s in fused:
                 row += f" [group->transfer fused: {self.fused_group}]"
+            if self.stream:
+                row += " [stream-cached mapping]"
             rows.append(row)
-        rows.append(f"head: {self.precision}/{self.backend}")
+        rows.append(f"head: {self.head}/{self.precision}/{self.backend}")
         return "; ".join(rows)
 
     # ------------------------------------------------ cost breakdown ----
@@ -284,10 +324,19 @@ class StagePlan:
                 4 * smp * k * c)
             row(f"stage{s + 1}.pos", cfg.pos_blocks[s] * blk, 4 * smp * c)
             c_prev = c
-        row("head", wbytes(c_prev, 512, self.precision)
-            + wbytes(512, 256, self.precision)
-            + wbytes(256, cfg.n_classes, self.precision),
-            4 * (512 + 256 + cfg.n_classes))
+        if self.head == "seg":
+            # Per-point head: fc1 consumes the [N, E + 2*C4] skip concat
+            # and every activation is n_points wide.
+            c_in = cfg.embed_dim + 2 * c_prev
+            row("head", wbytes(c_in, 512, self.precision)
+                + wbytes(512, 256, self.precision)
+                + wbytes(256, cfg.n_classes, self.precision),
+                4 * n * (512 + 256 + cfg.n_classes))
+        else:
+            row("head", wbytes(c_prev, 512, self.precision)
+                + wbytes(512, 256, self.precision)
+                + wbytes(256, cfg.n_classes, self.precision),
+                4 * (512 + 256 + cfg.n_classes))
         return rows
 
 
@@ -343,24 +392,30 @@ def _quant_for(spec, precision: str) -> Optional[QuantConfig]:
 
 def _build_ops(cfg, make_cbr: Callable, head_quant: Optional[QuantConfig],
                fused_key: Optional[str] = None,
-               fused_fn: Optional[Callable] = None) -> Tuple[StageOp, ...]:
+               fused_fn: Optional[Callable] = None,
+               head: str = "cls",
+               stream: bool = False) -> Tuple[StageOp, ...]:
     """The one op-sequence skeleton both lowerings share.
 
     ``make_cbr(path, stage, act)`` is the only thing that differs
     between the spec lowering (per-stage precision/backend resolution)
     and the legacy config lowering (one uniform backend) — the
-    topology walk itself exists exactly once.
+    topology walk itself exists exactly once.  ``head="seg"`` swaps the
+    global pool + :class:`HeadOp` tail for a :class:`SegHeadOp`;
+    ``stream=True`` marks every mapping op ``cached`` so the
+    interpreter can replay a stream cache.
     """
     ops: List[StageOp] = [EmbedOp(make_cbr(("embed",), None, True))]
     for s in range(_N_STAGES):
-        ops.append(SampleOp(stage=s, n_samples=cfg.stage_samples[s]))
+        ops.append(SampleOp(stage=s, n_samples=cfg.stage_samples[s],
+                            cached=stream))
         transfer = make_cbr(("stages", s, "transfer"), s, True)
         if fused_fn is not None:
             ops.append(FusedGroupTransferOp(
                 stage=s, k=cfg.k_neighbors, cbr=transfer,
                 kernel=fused_key, fn=fused_fn))
         else:
-            ops.append(GroupOp(stage=s, k=cfg.k_neighbors))
+            ops.append(GroupOp(stage=s, k=cfg.k_neighbors, cached=stream))
             ops.append(transfer)
         for branch, count in (("pre", cfg.pre_blocks[s]),
                               ("pos", cfg.pos_blocks[s])):
@@ -372,10 +427,14 @@ def _build_ops(cfg, make_cbr: Callable, head_quant: Optional[QuantConfig],
                     net2=make_cbr(base + ("net2",), s, False)))
             if branch == "pre":
                 ops.append(PoolOp(stage=s, axis=2))
-    ops.append(PoolOp(stage=None, axis=1))
-    ops.append(HeadOp(fc1=make_cbr(("head", "fc1"), None, True),
-                      fc2=make_cbr(("head", "fc2"), None, True),
-                      fc3_path=("head", "fc3"), fc3_quant=head_quant))
+    head_cls = HeadOp
+    if head == "seg":
+        head_cls = functools.partial(SegHeadOp, cached=stream)
+    else:
+        ops.append(PoolOp(stage=None, axis=1))
+    ops.append(head_cls(fc1=make_cbr(("head", "fc1"), None, True),
+                        fc2=make_cbr(("head", "fc2"), None, True),
+                        fc3_path=("head", "fc3"), fc3_quant=head_quant))
     return tuple(ops)
 
 
@@ -410,6 +469,27 @@ def lower(spec, cfg) -> StagePlan:
                 f"fused_group={fused_key!r} consumes BN-folded (w, b) "
                 f"transfer layers; set spec.fuse=True")
 
+    head = getattr(spec, "head", "cls") or "cls"
+    stream = bool(getattr(spec, "stream", False))
+    if stream:
+        if fused_key != "none":
+            raise ValueError(
+                f"stream=True cannot lower fused_group={fused_key!r}: "
+                f"the fused kernel has no cache-aware variant")
+        grouper_fn = registry.GROUPERS.get(spec.grouper)
+        if (getattr(grouper_fn, "neighbor_index", None) is None
+                or getattr(grouper_fn, "group_with_idx", None) is None):
+            raise ValueError(
+                f"stream=True needs a grouper exposing the "
+                f"neighbor_index/group_with_idx split (stream-cache "
+                f"contract); grouper {spec.grouper!r} does not")
+        sampler_fn = registry.SAMPLERS.get(spec.sampler)
+        if getattr(sampler_fn, "advances_state", None) is None:
+            raise ValueError(
+                f"stream=True needs a sampler declaring its "
+                f"advances_state stream-cache semantics; sampler "
+                f"{spec.sampler!r} does not")
+
     def make_cbr(path, stage, act) -> CBROp:
         precision = spec.precision if stage is None else stage_prec[stage]
         backend = spec.backend if stage is None else stage_back[stage]
@@ -420,11 +500,11 @@ def lower(spec, cfg) -> StagePlan:
 
     ops = _build_ops(cfg, make_cbr, _quant_for(spec, spec.precision),
                      fused_key=fused_key if fused_fn is not None else None,
-                     fused_fn=fused_fn)
+                     fused_fn=fused_fn, head=head, stream=stream)
     return StagePlan(name=spec.name, ops=ops,
                      stage_precision=stage_prec, stage_backend=stage_back,
                      precision=spec.precision, backend=spec.backend,
-                     fused_group=fused_key)
+                     fused_group=fused_key, head=head, stream=stream)
 
 
 def lower_config(cfg, backend_fn: Callable,
@@ -446,11 +526,12 @@ def lower_config(cfg, backend_fn: Callable,
                      precision=precision, backend=backend_key,
                      quant=quant, fn=backend_fn)
 
+    head = getattr(cfg, "head", "cls") or "cls"
     return StagePlan(name=cfg.name,
-                     ops=_build_ops(cfg, make_cbr, quant),
+                     ops=_build_ops(cfg, make_cbr, quant, head=head),
                      stage_precision=(precision,) * _N_STAGES,
                      stage_backend=(backend_key,) * _N_STAGES,
-                     precision=precision, backend=backend_key)
+                     precision=precision, backend=backend_key, head=head)
 
 
 # ------------------------------------------- fingerprint / search space -
@@ -511,6 +592,8 @@ def _fused_valid(spec) -> bool:
     that cannot lower."""
     if spec.fused_group == "none":
         return True
+    if getattr(spec, "stream", False):
+        return False
     if spec.fused_group not in registry.FUSED_OPS:
         return False
     if spec.grouper != "knn" or not spec.fuse:

@@ -101,6 +101,13 @@ def _fps_sampler(xyz, n_samples: int, lfsr_state, shared: bool):
     return sampling.fps_batched(xyz, n_samples), lfsr_state
 
 
+#: Stream-cache contract: a sampler that advances the LFSR state must
+#: still *run* on the cached path (so the state walk stays exactly the
+#: cold path's); only stateless samplers may have their indices
+#: replayed from the cache.  See ``repro.serve.streaming``.
+_fps_sampler.advances_state = False
+
+
 @register_sampler("urs")
 def _urs_sampler(xyz, n_samples: int, lfsr_state, shared: bool):
     """LFSR-driven Uniform Random Sampling (HLS4PC §2.1).
@@ -123,6 +130,9 @@ def _urs_sampler(xyz, n_samples: int, lfsr_state, shared: bool):
     return idx, new_state
 
 
+_urs_sampler.advances_state = True
+
+
 # ------------------------------------------------- builtin groupers -----
 
 @register_grouper("knn")
@@ -132,6 +142,28 @@ def _knn_grouper(xyz, feats, idx, k: int, affine_params, mode: str,
     from repro.core import knn as knn_core
     return knn_core.group_points(xyz, feats, idx, k, affine_params, mode,
                                  per_sample_norm=per_sample_norm)
+
+
+def _knn_neighbor_index(new_xyz, xyz, k: int):
+    from repro.core import knn as knn_core
+    return knn_core.neighbor_index(new_xyz, xyz, k)
+
+
+def _knn_group_with_idx(xyz, feats, idx, nbr_idx, affine_params,
+                        mode: str, per_sample_norm: bool):
+    from repro.core import knn as knn_core
+    return knn_core.group_with_idx(xyz, feats, idx, nbr_idx, affine_params,
+                                   mode, per_sample_norm=per_sample_norm)
+
+
+#: Stream-cache contract: a grouper exposing these two attributes can
+#: be split into its mapping half (``neighbor_index`` — cacheable) and
+#: its arithmetic half (``group_with_idx`` — always recomputed), and
+#: ``group_with_idx(.., neighbor_index(..), ..)`` must be bit-identical
+#: to calling the grouper whole.  ``lower(stream=True)`` rejects
+#: groupers without them.
+_knn_grouper.neighbor_index = _knn_neighbor_index
+_knn_grouper.group_with_idx = _knn_group_with_idx
 
 
 #: Default ball-query radius for the builtin ``ball`` grouper entry.
@@ -163,7 +195,21 @@ def make_ball_grouper(radius: float):
         return knn_core.group_points(xyz, feats, idx, k, affine_params,
                                      mode, per_sample_norm=per_sample_norm,
                                      radius=radius)
+
+    def ball_neighbor_index(new_xyz, xyz, k: int):
+        from repro.core import knn as knn_core
+        return knn_core.neighbor_index(new_xyz, xyz, k, radius=radius)
+
+    def ball_group_with_idx(xyz, feats, idx, nbr_idx, affine_params,
+                            mode: str, per_sample_norm: bool):
+        from repro.core import knn as knn_core
+        return knn_core.group_with_idx(xyz, feats, idx, nbr_idx,
+                                       affine_params, mode,
+                                       per_sample_norm=per_sample_norm)
+
     ball_grouper.radius = radius
+    ball_grouper.neighbor_index = ball_neighbor_index
+    ball_grouper.group_with_idx = ball_group_with_idx
     return ball_grouper
 
 

@@ -25,6 +25,7 @@ from repro.api import registry
 
 PRECISIONS = ("fp32", "int8")
 AFFINE_MODES = ("affine", "norm", "center")
+HEADS = ("cls", "seg")
 N_STAGES = 4
 
 
@@ -87,6 +88,18 @@ class PipelineSpec:
     # (e.g. "grouped_transfer") lowering each GroupOp + transfer-CBROp
     # pair to one gather+normalize+matmul+bias+ReLU kernel. ----
     fused_group: str = "none"
+    # ---- task head: "cls" pools to one label per cloud; "seg" lowers
+    # a SegHeadOp (1-NN upsample + skip concat + per-point classifier)
+    # emitting per-point logits ``[B, n_points, n_classes]``. ----
+    head: str = "cls"
+    # ---- streaming mode: ``stream=True`` lowers cache-aware
+    # SampleOp/GroupOp variants so a ``StreamSession``
+    # (``repro.serve.streaming``) can reuse sampled indices + neighbor
+    # lists across LiDAR frames whose per-point drift stays <=
+    # ``stream_drift_threshold`` (max point displacement vs the cached
+    # key frame, same units as the cloud coordinates). ----
+    stream: bool = False
+    stream_drift_threshold: float = 0.0
     # ---- batch semantics ----
     shared_urs: bool = False
     per_sample_norm: bool = False
@@ -135,6 +148,22 @@ class PipelineSpec:
         if not isinstance(self.fused_group, str):
             raise ValueError(f"fused_group must be a FUSED_OPS registry "
                              f"key or 'none', got {self.fused_group!r}")
+        if self.head not in HEADS:
+            raise ValueError(f"head must be one of {HEADS}, "
+                             f"got {self.head!r}")
+        if not isinstance(self.stream, bool):
+            raise ValueError(f"stream must be a bool, got {self.stream!r}")
+        thr = self.stream_drift_threshold
+        if (not isinstance(thr, (int, float)) or isinstance(thr, bool)
+                or not thr >= 0 or thr != thr or thr == float("inf")):
+            raise ValueError(
+                f"stream_drift_threshold must be a finite float >= 0, "
+                f"got {thr!r}")
+        if self.stream and self.fused_group != "none":
+            raise ValueError(
+                "stream=True is incompatible with fused_group="
+                f"{self.fused_group!r}: the fused group->transfer kernel "
+                "has no cache-aware lowering (set fused_group='none')")
 
     def replace(self, **kw) -> "PipelineSpec":
         return dataclasses.replace(self, **kw)
@@ -209,7 +238,8 @@ class PipelineSpec:
             embed_dim=self.embed_dim, k_neighbors=self.k_neighbors,
             stage_expansion=self.stage_expansion, pre_blocks=self.pre_blocks,
             pos_blocks=self.pos_blocks, res_expansion=self.res_expansion,
-            sampler=self.sampler, affine_mode=self.affine_mode, quant=quant)
+            sampler=self.sampler, affine_mode=self.affine_mode,
+            head=self.head, quant=quant)
 
     @classmethod
     def from_model_config(cls, cfg, **overrides) -> "PipelineSpec":
@@ -228,7 +258,7 @@ class PipelineSpec:
             stage_expansion=cfg.stage_expansion, pre_blocks=cfg.pre_blocks,
             pos_blocks=cfg.pos_blocks, res_expansion=cfg.res_expansion,
             sampler=cfg.sampler, affine_mode=cfg.affine_mode,
-            precision="fp32")
+            head=cfg.head, precision="fp32")
         if cfg.quant.enabled:
             fields.update(precision="int8",
                           w_bits=cfg.quant.w_bits,

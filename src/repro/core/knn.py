@@ -137,6 +137,39 @@ def normalize_group(grouped: jnp.ndarray, centers: jnp.ndarray,
     raise ValueError(f"unknown normalize mode: {mode}")
 
 
+def neighbor_index(new_xyz: jnp.ndarray, xyz: jnp.ndarray, k: int,
+                   radius: Optional[float] = None) -> jnp.ndarray:
+    """The mapping half of the grouper: [B, S, 3], [B, N, 3] -> [B, S, k].
+
+    ``radius=None`` selects plain KNN; a float switches to ball query.
+    This is the expensive, geometry-only piece the streaming cache
+    (``repro.serve.streaming``) reuses across coherent LiDAR frames.
+    """
+    if radius is None:
+        return knn_batched(new_xyz, xyz, k)
+    return ball_query_batched(new_xyz, xyz, k, radius)
+
+
+def group_with_idx(xyz: jnp.ndarray, feats: jnp.ndarray,
+                   sample_idx: jnp.ndarray, nbr_idx: jnp.ndarray,
+                   affine_params: Optional[dict], mode: str,
+                   per_sample_norm: bool = False
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """The arithmetic half: gather -> normalize -> concat, indices given.
+
+    Same contract as :func:`group_points` but with the neighbor list
+    ``nbr_idx`` [B, S, k] supplied (freshly computed or replayed from a
+    stream cache) instead of derived from coordinates.
+    """
+    new_xyz = jnp.take_along_axis(xyz, sample_idx[..., None], axis=1)
+    center_f = jnp.take_along_axis(feats, sample_idx[..., None], axis=1)
+    grouped = gather_neighbors(feats, nbr_idx)                # [B, S, k, C]
+    grouped = normalize_group(grouped, center_f, affine_params, mode,
+                              per_sample=per_sample_norm)
+    center_b = jnp.broadcast_to(center_f[:, :, None, :], grouped.shape)
+    return new_xyz, center_f, jnp.concatenate([grouped, center_b], axis=-1)
+
+
 def group_points(xyz: jnp.ndarray, feats: jnp.ndarray,
                  sample_idx: jnp.ndarray, k: int,
                  affine_params: Optional[dict], mode: str,
@@ -159,13 +192,6 @@ def group_points(xyz: jnp.ndarray, feats: jnp.ndarray,
       matching PointMLP's grouper output layout.
     """
     new_xyz = jnp.take_along_axis(xyz, sample_idx[..., None], axis=1)
-    center_f = jnp.take_along_axis(feats, sample_idx[..., None], axis=1)
-    if radius is None:
-        nbr_idx = knn_batched(new_xyz, xyz, k)                # [B, S, k]
-    else:
-        nbr_idx = ball_query_batched(new_xyz, xyz, k, radius)
-    grouped = gather_neighbors(feats, nbr_idx)                # [B, S, k, C]
-    grouped = normalize_group(grouped, center_f, affine_params, mode,
-                              per_sample=per_sample_norm)
-    center_b = jnp.broadcast_to(center_f[:, :, None, :], grouped.shape)
-    return new_xyz, center_f, jnp.concatenate([grouped, center_b], axis=-1)
+    nbr_idx = neighbor_index(new_xyz, xyz, k, radius)         # [B, S, k]
+    return group_with_idx(xyz, feats, sample_idx, nbr_idx, affine_params,
+                          mode, per_sample_norm)

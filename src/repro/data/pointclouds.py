@@ -84,13 +84,18 @@ def _shape_points(key, cls: int, n: int) -> jnp.ndarray:
     return jax.lax.switch(cls, branches)
 
 
-def _random_rotation(key) -> jnp.ndarray:
-    a = jax.random.uniform(key, (3,), minval=0, maxval=2 * jnp.pi)
+def _rotation_zyx(a) -> jnp.ndarray:
+    """Composed z-y-x axis rotations from the three angles in ``a``."""
     ca, sa = jnp.cos(a), jnp.sin(a)
     rz = jnp.array([[ca[0], -sa[0], 0], [sa[0], ca[0], 0], [0, 0, 1.0]])
     ry = jnp.array([[ca[1], 0, sa[1]], [0, 1.0, 0], [-sa[1], 0, ca[1]]])
     rx = jnp.array([[1.0, 0, 0], [0, ca[2], -sa[2]], [0, sa[2], ca[2]]])
     return rz @ ry @ rx
+
+
+def _random_rotation(key) -> jnp.ndarray:
+    return _rotation_zyx(
+        jax.random.uniform(key, (3,), minval=0, maxval=2 * jnp.pi))
 
 
 @functools.partial(jax.jit, static_argnames=("n_points", "batch"))
@@ -114,6 +119,46 @@ def make_batch(key, n_points: int, batch: int
 
     pts, cls = jax.vmap(one)(keys)
     return pts, cls
+
+
+@functools.partial(jax.jit, static_argnames=("n_points", "frames"))
+def make_stream(key, n_points: int, frames: int, drift: float = 0.02
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """A frame-coherent LiDAR-style sequence: one rigid body observed
+    over ``frames`` consecutive steps.
+
+    Frame 0 is a normalized shape sample (same construction as
+    :func:`make_batch`); each following frame applies a small random
+    rigid motion — rotation angles and translation components uniform
+    in ``±drift/2`` — plus ``0.1 * drift`` per-point Gaussian jitter,
+    so the max per-frame point displacement is O(``drift``).  This is
+    the temporal coherence the streaming cache exploits: pick
+    ``drift`` well below / above a session's drift threshold to force
+    hit-heavy / miss-heavy schedules.  Deterministic by ``key``.
+
+    Returns (points [frames, N, 3] f32, label int32).
+    """
+    kc, kp, kr, ks, kmot = jax.random.split(key, 5)
+    cls = jax.random.randint(kc, (), 0, N_CLASSES)
+    pts = _shape_points(kp, cls, n_points)
+    scale = jax.random.uniform(ks, (3,), minval=0.7, maxval=1.3)
+    pts = (pts * scale) @ _random_rotation(kr).T
+    pts = pts - jnp.mean(pts, axis=0, keepdims=True)
+    pts = pts / (jnp.max(jnp.linalg.norm(pts, axis=-1)) + 1e-6)
+
+    def step(cur, k):
+        ka, kt, kj = jax.random.split(k, 3)
+        ang = jax.random.uniform(ka, (3,), minval=-drift / 2,
+                                 maxval=drift / 2)
+        t = jax.random.uniform(kt, (3,), minval=-drift / 2,
+                               maxval=drift / 2)
+        nxt = cur @ _rotation_zyx(ang).T + t
+        nxt = nxt + 0.1 * drift * jax.random.normal(kj, cur.shape)
+        return nxt, nxt
+
+    _, rest = jax.lax.scan(step, pts, jax.random.split(kmot, frames - 1))
+    seq = jnp.concatenate([pts[None], rest], axis=0)
+    return seq.astype(jnp.float32), cls.astype(jnp.int32)
 
 
 def dataset(seed: int, n_points: int, batch: int, start_step: int = 0

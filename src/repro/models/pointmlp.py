@@ -42,6 +42,7 @@ class PointMLPConfig:
     res_expansion: float = 0.25           # Elite's slim residual bottleneck
     sampler: str = "fps"                  # fps | urs
     affine_mode: str = "affine"           # affine | norm (alpha/beta pruned)
+    head: str = "cls"                     # cls | seg (per-point logits)
     use_bn: bool = True                   # False after fuse_tree()
     quant: QuantConfig = QuantConfig(w_bits=32, a_bits=32)
     bn_momentum: float = 0.9
@@ -114,8 +115,11 @@ def pointmlp_init(key, cfg: PointMLPConfig) -> Dict:
         c_prev = c_out
     params["stages"] = stages
     k1, k2, k3 = (keys[next(ki)] for _ in range(3))
+    # Seg head fc1 consumes the per-point skip concat
+    # [embed_feats (E), upsampled final feats (C4), global max (C4)].
+    fc1_in = (cfg.embed_dim + 2 * c_prev if cfg.head == "seg" else c_prev)
     params["head"] = {
-        "fc1": _cbr_init(k1, c_prev, 512, cfg),
+        "fc1": _cbr_init(k1, fc1_in, 512, cfg),
         "fc2": _cbr_init(k2, 512, 256, cfg),
         "fc3": L.conv1d_init(k3, 256, cfg.n_classes, ksize=1, bias=True,
                              bn=False),
@@ -249,6 +253,33 @@ def _forward(params: Dict, cfg: PointMLPConfig, xyz: jnp.ndarray,
     (``_cbr_apply``) and the per-op backends are bypassed, exactly as
     before — the interpreter is written once for train and infer.
     """
+    logits, new_params, lfsr_state, _ = _forward_impl(
+        params, cfg, xyz, lfsr_state, train,
+        sampler=sampler, grouper=grouper, backend=backend,
+        shared_urs=shared_urs, per_sample_norm=per_sample_norm, plan=plan)
+    return logits, new_params, lfsr_state
+
+
+def _forward_impl(params: Dict, cfg: PointMLPConfig, xyz: jnp.ndarray,
+                  lfsr_state: Optional[jnp.ndarray], train: bool, *,
+                  sampler, grouper, backend,
+                  shared_urs: bool = False, per_sample_norm: bool = False,
+                  plan=None, mapping_cache: Optional[Dict] = None,
+                  collect_cache: bool = False
+                  ) -> Tuple[jnp.ndarray, Dict, Optional[jnp.ndarray],
+                             Optional[Dict]]:
+    """:func:`_forward` plus the stream-cache plumbing.
+
+    ``mapping_cache`` replays cached mapping results for the ops the
+    plan marked ``cached``: sampled indices (stateless samplers only —
+    state-advancing ones still run so the LFSR walk stays exactly the
+    cold path's), kNN/ball neighbor lists, and the seg head's 1-NN
+    upsample index.  ``collect_cache=True`` additionally returns the
+    cache pytree ``{"sample": (idx, ...), "nbr": (nbr, ...)[, "up":
+    idx]}`` (all leaves batch-leading) computed by this pass, so a
+    :class:`repro.serve.streaming.StreamSession` can key future frames
+    off it.  With both unset this is exactly the pre-stream walk.
+    """
     if plan is None:
         plan = stage_plan.lower_config(cfg, backend)
 
@@ -257,22 +288,49 @@ def _forward(params: Dict, cfg: PointMLPConfig, xyz: jnp.ndarray,
             return _cbr_apply(p, x, cfg, True, op.act)
         return op.fn(p, x, op.quant, op.act), p
 
+    collected_sample, collected_nbr, collected_up = [], [], None
     new_params = {k: v for k, v in params.items()}
     new_stages = [dict(st) for st in params["stages"]]
     for st in new_stages:
         st["pre"], st["pos"] = [], []
     cur_xyz, cur, idx = xyz, None, None
+    embed_feats = None
     logits = None
     for op in plan.ops:
         if isinstance(op, stage_plan.EmbedOp):
             cur, new_params["embed"] = run_cbr(op.cbr, params["embed"], xyz)
+            embed_feats = cur
         elif isinstance(op, stage_plan.SampleOp):
-            idx, lfsr_state = sampler(cur_xyz, op.n_samples, lfsr_state,
-                                      shared_urs)
+            replay = (op.cached and mapping_cache is not None
+                      and not getattr(sampler, "advances_state", True))
+            if replay:
+                idx = mapping_cache["sample"][op.stage]
+            else:
+                idx, lfsr_state = sampler(cur_xyz, op.n_samples, lfsr_state,
+                                          shared_urs)
+            if collect_cache:
+                collected_sample.append(idx)
         elif isinstance(op, stage_plan.GroupOp):
             affine = params["stages"][op.stage].get("affine")
-            cur_xyz, _, cur = grouper(cur_xyz, cur, idx, op.k, affine,
-                                      cfg.affine_mode, per_sample_norm)
+            if op.cached and (mapping_cache is not None or collect_cache):
+                # Split lowering: the mapping half (neighbor_index) is
+                # replayed or collected; the arithmetic half always
+                # recomputes on the frame's features.  group_points ==
+                # group_with_idx(neighbor_index(..)) bit-for-bit.
+                new_xyz = jnp.take_along_axis(cur_xyz, idx[..., None],
+                                              axis=1)
+                if mapping_cache is not None:
+                    nbr = mapping_cache["nbr"][op.stage]
+                else:
+                    nbr = grouper.neighbor_index(new_xyz, cur_xyz, op.k)
+                if collect_cache:
+                    collected_nbr.append(nbr)
+                cur_xyz, _, cur = grouper.group_with_idx(
+                    cur_xyz, cur, idx, nbr, affine, cfg.affine_mode,
+                    per_sample_norm)
+            else:
+                cur_xyz, _, cur = grouper(cur_xyz, cur, idx, op.k, affine,
+                                          cfg.affine_mode, per_sample_norm)
         elif isinstance(op, stage_plan.CBROp):
             # Bare CBR ops are stage transfers (embed/head CBRs ride
             # inside their wrapper ops).
@@ -304,10 +362,41 @@ def _forward(params: Dict, cfg: PointMLPConfig, xyz: jnp.ndarray,
                          if train else op.fc3_quant)
             logits = L.conv1d_apply(head["fc3"], h, quant=fc3_quant)
             new_params["head"] = {"fc1": f1, "fc2": f2, "fc3": head["fc3"]}
+        elif isinstance(op, stage_plan.SegHeadOp):
+            # Per-point segmentation head: global descriptor pooled
+            # here (no standalone global PoolOp in seg plans), final
+            # stage features upsampled back to input resolution by
+            # 1-NN (the cacheable mapping op), skip concat, 3-layer
+            # per-point classifier -> [B, n_points, n_classes].
+            g = jnp.max(cur, axis=1)                           # [B, C4]
+            replay = op.cached and mapping_cache is not None
+            if replay:
+                up_idx = mapping_cache["up"]
+            else:
+                up_idx = knn_core.knn_batched(xyz, cur_xyz, 1)  # [B,N,1]
+            if collect_cache:
+                collected_up = up_idx
+            upsampled = knn_core.gather_neighbors(cur, up_idx)[:, :, 0, :]
+            g_b = jnp.broadcast_to(g[:, None, :],
+                                   upsampled.shape[:2] + (g.shape[-1],))
+            h = jnp.concatenate([embed_feats, upsampled, g_b], axis=-1)
+            head = params["head"]
+            h, f1 = run_cbr(op.fc1, head["fc1"], h)
+            h, f2 = run_cbr(op.fc2, head["fc2"], h)
+            fc3_quant = ((cfg.quant if cfg.quant.enabled else None)
+                         if train else op.fc3_quant)
+            logits = L.conv1d_apply(head["fc3"], h, quant=fc3_quant)
+            new_params["head"] = {"fc1": f1, "fc2": f2, "fc3": head["fc3"]}
         else:
             raise TypeError(f"unknown stage-plan op {type(op).__name__}")
     new_params["stages"] = new_stages
-    return logits, new_params, lfsr_state
+    cache = None
+    if collect_cache:
+        cache = {"sample": tuple(collected_sample),
+                 "nbr": tuple(collected_nbr)}
+        if collected_up is not None:
+            cache["up"] = collected_up
+    return logits, new_params, lfsr_state, cache
 
 
 def pointmlp_infer_with(params: Dict, cfg: PointMLPConfig,
@@ -316,8 +405,8 @@ def pointmlp_infer_with(params: Dict, cfg: PointMLPConfig,
                         sampler, grouper, backend,
                         shared_urs: bool = False,
                         per_sample_norm: bool = False,
-                        plan=None
-                        ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+                        plan=None, mapping_cache: Optional[Dict] = None,
+                        collect_cache: bool = False):
     """Inference forward over resolved pipeline components.
 
     The spec-era hot path: ``repro.api.build`` resolves a
@@ -344,29 +433,47 @@ def pointmlp_infer_with(params: Dict, cfg: PointMLPConfig,
     ~10% dispatch-time cost at batch 8 on CPU — recovered many times
     over once ``data_shards`` spreads the lanes across devices.
 
-    Returns: (logits [B, n_classes], advanced lfsr state).
+    Stream-cache kwargs: ``mapping_cache`` (a batch-leading cache
+    pytree from a prior ``collect_cache`` pass) replays cached mapping
+    indices on the ops the plan marked ``cached``; ``collect_cache``
+    appends the computed cache pytree to the return tuple —
+    ``(logits, state, cache)`` instead of ``(logits, state)``.
+
+    Returns: (logits, advanced lfsr state[, collected cache]) —
+    logits [B, n_classes] for the cls head, [B, n_points, n_classes]
+    for the seg head.
     """
     if plan is None:
         plan = stage_plan.lower_config(cfg, backend)
     if shared_urs and per_sample_norm:
-        def lane(cloud):
-            logits, _, state = _forward(
+        def lane(args):
+            cloud, mc = args
+            mc = (None if mc is None else
+                  jax.tree_util.tree_map(lambda a: a[None], mc))
+            logits, _, state, cache = _forward_impl(
                 params, cfg, cloud[None], lfsr_state, train=False,
                 sampler=sampler, grouper=grouper, backend=backend,
-                shared_urs=True, per_sample_norm=True, plan=plan)
-            return logits[0], state
+                shared_urs=True, per_sample_norm=True, plan=plan,
+                mapping_cache=mc, collect_cache=collect_cache)
+            if collect_cache:
+                cache = jax.tree_util.tree_map(lambda a: a[0], cache)
+            return logits[0], state, cache
 
-        logits, states = jax.lax.map(lane, xyz)
-        if lfsr_state is None:
-            return logits, None
-        # Every lane advances the shared state identically; return one.
-        return logits, jax.tree_util.tree_map(lambda s: s[0], states)
-    logits, _, lfsr_state = _forward(params, cfg, xyz, lfsr_state,
-                                     train=False, sampler=sampler,
-                                     grouper=grouper, backend=backend,
-                                     shared_urs=shared_urs,
-                                     per_sample_norm=per_sample_norm,
-                                     plan=plan)
+        logits, states, caches = jax.lax.map(lane, (xyz, mapping_cache))
+        state_out = (None if lfsr_state is None else
+                     # Every lane advances the shared state identically;
+                     # return one.
+                     jax.tree_util.tree_map(lambda s: s[0], states))
+        if collect_cache:
+            return logits, state_out, caches
+        return logits, state_out
+    logits, _, lfsr_state, cache = _forward_impl(
+        params, cfg, xyz, lfsr_state, train=False, sampler=sampler,
+        grouper=grouper, backend=backend, shared_urs=shared_urs,
+        per_sample_norm=per_sample_norm, plan=plan,
+        mapping_cache=mapping_cache, collect_cache=collect_cache)
+    if collect_cache:
+        return logits, lfsr_state, cache
     return logits, lfsr_state
 
 
@@ -449,7 +556,15 @@ def pointmlp_flops_breakdown(cfg: PointMLPConfig) -> Dict[str, int]:
         fl[f"stage{s + 1}.pos"] = (cfg.pos_blocks[s] * 2 * smp
                                    * (c * mid + mid * c))
         n, c_prev = smp, c
-    fl["head"] = 2 * (c_prev * 512 + 512 * 256 + 256 * cfg.n_classes)
+    if cfg.head == "seg":
+        # 1-NN upsample distances (n_points x S4 x 3 MACs) + the
+        # per-point classifier over the [E + 2*C4] skip concat.
+        n0 = cfg.n_points
+        fl["head"] = (2 * n0 * n * 3
+                      + 2 * n0 * ((cfg.embed_dim + 2 * c_prev) * 512
+                                  + 512 * 256 + 256 * cfg.n_classes))
+    else:
+        fl["head"] = 2 * (c_prev * 512 + 512 * 256 + 256 * cfg.n_classes)
     return {op: int(v) for op, v in fl.items()}
 
 

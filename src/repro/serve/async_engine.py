@@ -162,7 +162,14 @@ class ServeFuture:
 class _Inflight:
     """One dispatched batch whose device compute may still be running."""
     futures: List[ServeFuture]
-    logits: jnp.ndarray          # [max_batch, n_classes], device-async
+    logits: jnp.ndarray          # [max_batch, ...], device-async
+    # Per-future stream info, parallel to ``futures`` (None for plain
+    # requests): ("hit", state, cache_rows) | ("miss", state, cloud).
+    stream: List = dataclasses.field(default_factory=list)
+    # Collect-path cache output (batch-leading pytree) for a cold
+    # dispatch on a streaming pipeline; miss sessions refresh from
+    # their row at retire time.  None for cached/plain dispatches.
+    cache: object = None
 
 
 class AsyncPointCloudEngine:
@@ -260,8 +267,33 @@ class AsyncPointCloudEngine:
                 f"got shape {cloud.shape}")
         fut = ServeFuture(self._seq, self._clock())
         self._seq += 1
-        self._queue.append((cloud, fut))
+        self._queue.append((cloud, fut, None))
         return fut
+
+    def _submit_stream(self, cloud, state, hit: bool) -> ServeFuture:
+        """Internal entry point for :class:`~repro.serve.streaming.
+        AsyncStreamSession` (the cloud is already validated there).
+        Hit frames snapshot the session's current cache rows so a
+        later ``reset()`` cannot strand a queued frame."""
+        if self._closed:
+            raise RuntimeError("engine is closed")
+        fut = ServeFuture(self._seq, self._clock())
+        self._seq += 1
+        info = ("hit", state, state.cache) if hit else ("miss", state, cloud)
+        self._queue.append((cloud, fut, info))
+        return fut
+
+    def open_stream(self, *, max_age=None):
+        """A future-returning :class:`~repro.serve.streaming.
+        AsyncStreamSession` over this engine's submit path.  Stream
+        frames co-batch with plain requests and other sessions' frames
+        (cache-replay dispatches and full-recompute dispatches never
+        mix — see ``_dispatch``).  Requires a ``stream=True`` spec."""
+        from repro.serve import streaming
+        streaming._require_streaming(self.pipeline)
+        return streaming.AsyncStreamSession(
+            self._submit_stream, n_points=self.cfg.n_points,
+            threshold=self.spec.stream_drift_threshold, max_age=max_age)
 
     def pump(self, block: bool = True) -> int:
         """One scheduler turn; returns how many requests were dispatched.
@@ -370,8 +402,17 @@ class AsyncPointCloudEngine:
         dummy = jnp.zeros((self.max_batch, self.cfg.n_points, 3),
                           jnp.float32)
         t0 = time.time()
-        logits, _ = self.pipeline.infer(dummy, jnp.array(self._lfsr0))
-        jax.block_until_ready(logits)
+        if self.pipeline.streaming:
+            # Streaming dispatches run the collect/cached executables,
+            # not the plain one — compile both.
+            logits, _, cache = self.pipeline.infer_collect(
+                dummy, jnp.array(self._lfsr0))
+            cached, _ = self.pipeline.infer_cached(
+                dummy, jnp.array(self._lfsr0), cache)
+            jax.block_until_ready((logits, cached))
+        else:
+            logits, _ = self.pipeline.infer(dummy, jnp.array(self._lfsr0))
+            jax.block_until_ready(logits)
         dt = time.time() - t0
         self.stats.compile_s += dt
         return dt
@@ -385,21 +426,61 @@ class AsyncPointCloudEngine:
 
     def _dispatch(self, n: int) -> None:
         t_host = time.time()
+        streaming = self.pipeline.streaming
+        if streaming:
+            # Homogeneous-prefix run: one dispatch is either a
+            # cache-replay batch (all stream hits -> infer_cached) or a
+            # full-recompute batch (plain requests + stream misses ->
+            # infer_collect) — never mixed.  Trim n to the longest
+            # same-kind prefix; the remainder stays queued (FIFO order
+            # preserved) for the next pump.
+            def _is_hit(entry):
+                return entry[2] is not None and entry[2][0] == "hit"
+            lead = _is_hit(self._queue[0])
+            run = 1
+            while run < n and _is_hit(self._queue[run]) == lead:
+                run += 1
+            n = run
         taken = [self._queue.popleft() for _ in range(n)]
-        chunk = batching.stack_requests([c for c, _ in taken],
+        chunk = batching.stack_requests([c for c, _, _ in taken],
                                         self.cfg.n_points)
         batch, pad = batching.pad_to_batch(chunk, self.max_batch)
+        stream = [s for _, _, s in taken]
+        hit_run = streaming and stream[0] is not None \
+            and stream[0][0] == "hit"
+        if hit_run:
+            # Stack the sessions' per-lane cache rows; pad lanes replay
+            # zero indices (index 0 everywhere — valid, computed, never
+            # returned, exactly like zero-padded clouds).
+            rows = [s[2] for s in stream]
+            rows += [jax.tree_util.tree_map(jnp.zeros_like, rows[0])
+                     ] * pad
+            cache_in = jax.tree_util.tree_map(
+                lambda *r: jnp.stack(r), *rows)
         self.stats.host_s += time.time() - t_host
 
         # Enqueue batch N+1 on the device, *then* retire batch N: the
         # block on N overlaps with N+1's H2D transfer + compute, and the
         # stack/pad above overlapped with N's compute.  The returned
         # LFSR state is discarded — every dispatch restarts from the
-        # seed state (dispatch-invariance contract).
+        # seed state (dispatch-invariance contract; for streams this is
+        # what makes a cached frame bit-identical to its cold replay).
         t0 = time.time()
-        logits, _ = self.pipeline.infer(batch, jnp.array(self._lfsr0))
+        cache_out = None
+        if hit_run:
+            logits, _ = self.pipeline.infer_cached(
+                batch, jnp.array(self._lfsr0), cache_in)
+        elif streaming:
+            # Collect-path logits are bit-identical to plain infer, so
+            # plain requests keep golden equivalence; only miss
+            # sessions read their cache row back at retire time.
+            logits, _, cache_out = self.pipeline.infer_collect(
+                batch, jnp.array(self._lfsr0))
+        else:
+            logits, _ = self.pipeline.infer(batch, jnp.array(self._lfsr0))
         self.stats.serve_s += time.time() - t0
-        nxt = _Inflight([f for _, f in taken], logits)
+        nxt = _Inflight([f for _, f, _ in taken], logits, stream,
+                        cache_out)
         self._retire()
         self._inflight = nxt
         self.stats.batches += 1
@@ -414,11 +495,18 @@ class AsyncPointCloudEngine:
         t0 = time.time()
         logits = jax.block_until_ready(self._inflight.logits)
         self.stats.serve_s += time.time() - t0
-        futures, self._inflight = self._inflight.futures, None
+        inflight, self._inflight = self._inflight, None
         now = self._clock()
-        for i, fut in enumerate(futures):
+        for i, fut in enumerate(inflight.futures):
             fut._resolve(logits[i], now)
             self.latencies_ms.append(fut.latency_ms)
+            info = inflight.stream[i] if i < len(inflight.stream) else None
+            if (info is not None and info[0] == "miss"
+                    and inflight.cache is not None):
+                _, state, cloud = info
+                state.refresh(
+                    jax.tree_util.tree_map(lambda a, i=i: a[i],
+                                           inflight.cache), cloud)
 
     # ------------------------------------------------ asyncio shell ----
 

@@ -158,14 +158,10 @@ class PipelineFleet:
 
     # ------------------------------------------------------ sans-IO ----
 
-    def submit(self, tenant: str, points) -> ServeFuture:
-        """Route + admit one ``[N, 3]`` cloud for ``tenant``.
-
-        Returns the request's future on admission; raises
-        :class:`Overloaded` on a shed (typed, counted in
-        ``tenant_stats``, no future created) and ``KeyError`` for an
-        unknown tenant.
-        """
+    def _route_admit(self, tenant: str):
+        """Shared route + admission front half of every submit path;
+        returns ``(tenant_state, replica)`` or raises ``Overloaded`` /
+        ``KeyError`` before any future exists."""
         if self._closed:
             raise RuntimeError("fleet is closed")
         try:
@@ -184,7 +180,10 @@ class PipelineFleet:
         except Overloaded:
             state.shed += 1
             raise
-        fut = replica.engine.submit(points)
+        return state, replica
+
+    def _settle_admitted(self, state: TenantState,
+                         fut: ServeFuture) -> ServeFuture:
         state.submitted += 1
         state.inflight += 1
 
@@ -194,6 +193,47 @@ class PipelineFleet:
 
         fut.add_done_callback(settle)
         return fut
+
+    def submit(self, tenant: str, points) -> ServeFuture:
+        """Route + admit one ``[N, 3]`` cloud for ``tenant``.
+
+        Returns the request's future on admission; raises
+        :class:`Overloaded` on a shed (typed, counted in
+        ``tenant_stats``, no future created) and ``KeyError`` for an
+        unknown tenant.
+        """
+        state, replica = self._route_admit(tenant)
+        return self._settle_admitted(state, replica.engine.submit(points))
+
+    def open_stream(self, tenant: str, *, max_age=None):
+        """A :class:`~repro.serve.streaming.AsyncStreamSession` for
+        ``tenant`` over the fleet's routed submit path.
+
+        Each frame routes and admits exactly like :meth:`submit` (an
+        ``Overloaded`` shed leaves the session's cache state
+        untouched).  The cache stays valid across replicas of the
+        tenant's tier: replicas share spec, params, and seed, so a
+        cache collected on one replica replays bit-identically on any
+        other.  Requires the tier's spec to set ``stream=True``.
+        """
+        from repro.serve import streaming
+        try:
+            tstate = self.tenants[tenant]
+        except KeyError:
+            raise KeyError(
+                f"unknown tenant {tenant!r}; registered tenants: "
+                f"{', '.join(sorted(self.tenants))}") from None
+        pipe = self._tier_replicas[tstate.spec.tier][0].engine.pipeline
+        streaming._require_streaming(pipe)
+
+        def submit_stream(cloud, cstate, hit):
+            state, replica = self._route_admit(tenant)
+            fut = replica.engine._submit_stream(cloud, cstate, hit)
+            return self._settle_admitted(state, fut)
+
+        return streaming.AsyncStreamSession(
+            submit_stream, n_points=pipe.model_config.n_points,
+            threshold=pipe.spec.stream_drift_threshold, max_age=max_age)
 
     def pump(self, block: bool = True) -> int:
         """One scheduler turn across the pool, in replica order;

@@ -80,6 +80,7 @@ class PointCloudEngine:
         self.cfg = self.pipeline.model_config
         self.params = self.pipeline.params
         self.stats = PointCloudStats()
+        self._seed = int(seed)
         # One LFSR stream per dispatch lane — sized from max_batch (the
         # historical 64-stream floor silently under-provisioned
         # max_batch > 64; pipeline.infer now rejects short states).
@@ -128,6 +129,10 @@ class PointCloudEngine:
         t_host = time.time()
         pts = batching.as_point_queue(points, self.cfg.n_points)
         if pts.shape[0] == 0:                       # drained queue
+            if self.cfg.head == "seg":
+                return jnp.zeros(
+                    (0, self.cfg.n_points, self.cfg.n_classes),
+                    jnp.float32)
             return jnp.zeros((0, self.cfg.n_classes), jnp.float32)
         r = pts.shape[0]
         chunks = self._chunk_queue(pts)
@@ -145,8 +150,21 @@ class PointCloudEngine:
         return jnp.concatenate(out, axis=0)
 
     def predict(self, points) -> jnp.ndarray:
-        """Top-1 class ids [R] for a ragged queue."""
+        """Top-1 class ids for a ragged queue — [R] for the cls head,
+        [R, n_points] for seg."""
         return jnp.argmax(self.classify(points), axis=-1).astype(jnp.int32)
+
+    def open_stream(self, *, max_age=None, batch=None):
+        """A blocking :class:`~repro.serve.streaming.StreamSession` over
+        this engine's pipeline, seeded with the engine's seed (every
+        stream frame restarts from the seed LFSR state — the streaming
+        transport contract — so sessions never consume or perturb the
+        engine's persistent queue state).  Requires a ``stream=True``
+        spec.
+        """
+        from repro.serve.streaming import StreamSession
+        return StreamSession(self.pipeline, seed=self._seed,
+                             max_age=max_age, batch=batch)
 
     def describe(self) -> str:
         """The frozen pipeline's description plus serving shape."""

@@ -98,7 +98,9 @@ def replica_submesh(mesh: Mesh, replica: int) -> Mesh:
 
 
 def shard_forward(fwd: Callable, spec,
-                  mesh: Mesh | None = None) -> Tuple[Callable, Mesh]:
+                  mesh: Mesh | None = None,
+                  cache_in: bool = False,
+                  cache_out: bool = False) -> Tuple[Callable, Mesh]:
     """Wrap a built ``fwd(params, pts, lfsr)`` in a data-parallel
     ``shard_map`` dispatch over ``spec.data_shards`` devices.
 
@@ -114,6 +116,11 @@ def shard_forward(fwd: Callable, spec,
         fleet placement passes a :func:`replica_submesh` row here so
         each pool replica owns its device set; None builds the default
         first-devices mesh.  Must match ``spec.data_shards``.
+      cache_in: ``fwd`` takes a trailing stream-cache pytree argument
+        (batch-leading leaves) — split with the lanes, ``P("data")``
+        as a pytree prefix.
+      cache_out: ``fwd`` returns a trailing collected-cache pytree —
+        likewise lane-split on the way out.
     """
     if not spec.per_sample_norm:
         raise ValueError(
@@ -132,11 +139,18 @@ def shard_forward(fwd: Callable, spec,
             f"{tuple(mesh.axis_names)} shape {mesh.devices.shape} "
             f"(build replica rows with replica_submesh(make_mesh2d(...)))")
     lfsr_spec = P() if spec.shared_urs else P("data")
-    sharded = compat.shard_map(
-        fwd, mesh, in_specs=(P(), P("data"), lfsr_spec),
-        out_specs=(P("data"), lfsr_spec))
+    # A single P("data") acts as a pytree *prefix* for the whole cache
+    # subtree — every leaf is batch-leading, so they all lane-split.
+    in_specs = (P(), P("data"), lfsr_spec)
+    if cache_in:
+        in_specs = in_specs + (P("data"),)
+    out_specs = (P("data"), lfsr_spec)
+    if cache_out:
+        out_specs = out_specs + (P("data"),)
+    sharded = compat.shard_map(fwd, mesh, in_specs=in_specs,
+                               out_specs=out_specs)
 
-    def dispatch(params, pts, lfsr):
+    def dispatch(params, pts, lfsr, *extra):
         with context.use_mesh(mesh):
             batch = pts.shape[0]
             if batch % spec.data_shards:
@@ -152,6 +166,6 @@ def shard_forward(fwd: Callable, spec,
                     f"splits the LFSR streams with the lanes and needs "
                     f"exactly one stream per lane: got {lfsr.shape[0]} "
                     f"streams for batch {batch}")
-            return sharded(params, pts, lfsr)
+            return sharded(params, pts, lfsr, *extra)
 
     return dispatch, mesh

@@ -1,0 +1,342 @@
+"""Streaming LiDAR serving: per-stream temporal caches over mapping ops.
+
+Video-rate LiDAR traffic (the PointNet-on-FPGA / PointAcc motivating
+workload) is frame-to-frame coherent: consecutive frames of one stream
+are small rigid motions of each other, so the *mapping* results — FPS
+sampled indices, kNN/ball neighbor lists, the seg head's 1-NN upsample
+index — barely change while the *arithmetic* (normalize, CBR layers)
+must rerun on the frame's actual coordinates.  A
+:class:`StreamSession` exploits exactly that split: it keys a cache of
+mapping results off a per-point drift metric (max point displacement
+vs the cached key frame) and replays it for frames whose drift stays
+within ``spec.stream_drift_threshold``, falling back to the full
+recompute path on a cache miss, age-based eviction, or explicit
+:meth:`~StreamSession.reset`.
+
+The correctness contract (pinned by ``tests/serving/test_streaming.py``
+and the hypothesis property in ``test_property.py``): **every frame's
+logits are bit-identical to the stateless reference**
+(:func:`replay_reference`) — miss frames equal the plain cold path
+exactly, and hit frames equal recomputing the key frame's cache from
+scratch and replaying it, with zero carried device state.  Two
+structural facts make this exact rather than approximate:
+
+* State-advancing samplers (URS) *run* on the cached path — only their
+  stage's neighbor lists replay — so the LFSR walk is exactly the cold
+  path's (``advances_state`` registry attribute; stateless samplers
+  like FPS replay their indices outright).
+* Every stream transport restarts each frame's dispatch from the
+  session's **seed** LFSR state (the async engine's dispatch-invariance
+  contract, adopted here for all three transports — direct, sync
+  engine, async engine/fleet), so a frame's result is independent of
+  dispatch shape and of how many frames preceded it.
+
+Transports::
+
+    pipe = build(spec.replace(stream=True, stream_drift_threshold=0.05)
+                     .serving(), params)
+    sess = StreamSession(pipe)                  # direct, blocking
+    logits = sess.infer(frame)                  # [n_classes] / [N, C]
+
+    sess = sync_engine.open_stream()            # same, engine-owned seed
+    sess = async_engine.open_stream()           # AsyncStreamSession
+    fut = sess.submit(frame); engine.pump()     # futures via the
+    sess = fleet.open_stream("lidar-rt")        # existing submit path
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["StreamStats", "StreamSession", "AsyncStreamSession",
+           "replay_reference"]
+
+
+@dataclasses.dataclass
+class StreamStats:
+    """Per-session cache accounting.  ``frames == hits + misses``;
+    resets count explicit :meth:`StreamSession.reset` calls (not
+    frames), evictions the subset of misses forced by ``max_age``."""
+    frames: int = 0
+    hits: int = 0
+    misses: int = 0
+    resets: int = 0
+    evictions: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.frames if self.frames else 0.0
+
+
+def _check_frame(frame, n_points: int) -> np.ndarray:
+    arr = np.asarray(frame, np.float32)
+    if arr.shape != (n_points, 3):
+        raise ValueError(
+            f"a stream frame is one [N={n_points}, 3] cloud; got shape "
+            f"{arr.shape}")
+    return arr
+
+
+class _CacheState:
+    """The decision + cache core every transport shares.
+
+    Holds the key frame's coordinates (host-side, for the drift
+    metric), the per-lane cache rows (batch dim stripped), and the
+    hits-since-refresh age.  ``decide`` is pure (no mutation) so a
+    shed submission can leave the session untouched; ``commit``
+    applies the decision to the stats, ``refresh`` installs a new key
+    frame + cache.
+    """
+
+    def __init__(self, threshold: float, max_age: Optional[int] = None):
+        if not threshold >= 0:
+            raise ValueError(f"drift threshold must be >= 0, "
+                             f"got {threshold!r}")
+        if max_age is not None and (not isinstance(max_age, int)
+                                    or max_age < 1):
+            raise ValueError(f"max_age must be None or a positive int, "
+                             f"got {max_age!r}")
+        self.threshold = threshold
+        self.max_age = max_age
+        self.key_xyz: Optional[np.ndarray] = None
+        self.cache = None            # per-lane rows, batch dim stripped
+        self.age = 0                 # hits served since last refresh
+        self.stats = StreamStats()
+
+    def drift(self, frame: np.ndarray) -> float:
+        """Max per-point displacement vs the cached key frame (inf when
+        no cache is live)."""
+        if self.key_xyz is None:
+            return float("inf")
+        return float(np.max(np.linalg.norm(frame - self.key_xyz, axis=-1)))
+
+    def decide(self, frame: np.ndarray) -> str:
+        """``"hit"`` | ``"miss"`` | ``"evict"`` for this frame — pure."""
+        if self.cache is None:
+            return "miss"
+        if self.max_age is not None and self.age >= self.max_age:
+            return "evict"
+        if self.drift(frame) > self.threshold:
+            return "miss"
+        return "hit"
+
+    def commit(self, decision: str) -> None:
+        self.stats.frames += 1
+        if decision == "hit":
+            self.stats.hits += 1
+            self.age += 1
+        else:
+            self.stats.misses += 1
+            if decision == "evict":
+                self.stats.evictions += 1
+
+    def refresh(self, cache_row, key_xyz: np.ndarray) -> None:
+        self.cache = cache_row
+        self.key_xyz = key_xyz
+        self.age = 0
+
+    def reset(self) -> None:
+        self.cache = None
+        self.key_xyz = None
+        self.age = 0
+        self.stats.resets += 1
+
+
+def _require_streaming(pipeline) -> None:
+    if not getattr(pipeline, "streaming", False):
+        raise ValueError(
+            "stream sessions need a streaming pipeline — build one from "
+            "a spec with stream=True (e.g. spec.replace(stream=True, "
+            "stream_drift_threshold=0.05))")
+
+
+class StreamSession:
+    """Blocking per-stream session over a streaming
+    :class:`~repro.api.build.FrozenPipeline` (the direct transport;
+    the sync engine's :meth:`~repro.serve.pointcloud.PointCloudEngine.
+    open_stream` returns one configured with the engine's seed).
+
+    Args:
+      pipeline: a ``stream=True`` pipeline (``pipeline.streaming``).
+      seed: LFSR seed; **every frame's dispatch restarts from this seed
+        state** (the streaming transport contract — see module doc).
+      max_age: evict the cache after this many consecutive hits (None =
+        drift-only invalidation).
+      batch: dispatch width — the frame is replicated across lanes and
+        lane 0 returned, bit-identical at any width because the serving
+        walk is lane-mapped.  Defaults to ``spec.data_shards`` (the
+        minimum a sharded dispatch accepts).
+    """
+
+    def __init__(self, pipeline, *, seed: int = 0,
+                 max_age: Optional[int] = None,
+                 batch: Optional[int] = None):
+        _require_streaming(pipeline)
+        spec = pipeline.spec
+        if batch is None:
+            batch = max(1, spec.data_shards)
+        if batch < 1 or batch % max(1, spec.data_shards):
+            raise ValueError(
+                f"stream batch must be a positive multiple of "
+                f"data_shards={spec.data_shards}, got {batch}")
+        self.pipeline = pipeline
+        self._batch = int(batch)
+        self._lfsr0 = pipeline.seed_state(seed, self._batch)
+        self._state = _CacheState(spec.stream_drift_threshold, max_age)
+        # The full-width cache for the hit dispatch.  A miss replicates
+        # the frame across every lane, so the collect output rows are
+        # identical — the whole output *is* the broadcast cache, kept
+        # on device so a hit does zero host-side cache work per frame.
+        self._cache_batched = None
+
+    @property
+    def stats(self) -> StreamStats:
+        return self._state.stats
+
+    def drift(self, frame) -> float:
+        """Drift metric of ``frame`` vs the current key frame."""
+        frame = _check_frame(frame, self.pipeline.model_config.n_points)
+        return self._state.drift(frame)
+
+    def reset(self) -> None:
+        """Drop the cache: the next frame takes the full recompute path."""
+        self._state.reset()
+        self._cache_batched = None
+
+    def infer(self, frame) -> jnp.ndarray:
+        """Serve one frame; returns its logits row ([n_classes] for the
+        cls head, [n_points, n_classes] for seg), bit-identical to the
+        stateless cold path per the module contract."""
+        frame = _check_frame(frame, self.pipeline.model_config.n_points)
+        decision = self._state.decide(frame)
+        self._state.commit(decision)
+        pts = jnp.asarray(
+            np.broadcast_to(frame[None], (self._batch,) + frame.shape))
+        if decision == "hit":
+            logits, _ = self.pipeline.infer_cached(
+                pts, jnp.array(self._lfsr0), self._cache_batched)
+        else:
+            logits, _, cache = self.pipeline.infer_collect(
+                pts, jnp.array(self._lfsr0))
+            self._state.refresh(
+                jax.tree_util.tree_map(lambda a: a[0], cache), frame)
+            self._cache_batched = cache
+        return logits[0]
+
+
+class AsyncStreamSession:
+    """Future-returning per-stream session over the async engine or the
+    fleet (their ``open_stream`` methods construct it; the submit path
+    is the engines' existing queue — stream frames co-batch with plain
+    requests and other sessions' frames).
+
+    The cache decision is made at :meth:`submit` time against the
+    session's current key frame; a miss frame's cache refresh lands
+    when its dispatch retires.  One frame may be unresolved per session
+    at a time (the next decision needs the previous refresh), so pump
+    the engine between frames; concurrent *sessions* are what fill
+    dispatch lanes.  A shed submission (fleet admission raising
+    ``Overloaded``) leaves the session state untouched.
+    """
+
+    def __init__(self, submit_fn: Callable, *, n_points: int,
+                 threshold: float, max_age: Optional[int] = None):
+        self._submit_fn = submit_fn
+        self._n_points = n_points
+        self._state = _CacheState(threshold, max_age)
+        self._pending = None
+
+    @property
+    def stats(self) -> StreamStats:
+        return self._state.stats
+
+    def drift(self, frame) -> float:
+        """Drift metric of ``frame`` vs the current key frame."""
+        frame = _check_frame(frame, self._n_points)
+        return self._state.drift(frame)
+
+    def reset(self) -> None:
+        """Drop the cache: the next frame takes the full recompute path."""
+        self._state.reset()
+
+    def submit(self, frame):
+        """Enqueue one frame; returns its
+        :class:`~repro.serve.async_engine.ServeFuture`."""
+        if self._pending is not None and not self._pending.done():
+            raise RuntimeError(
+                "this stream session already has a frame in flight — "
+                "pump/flush the engine until it resolves before "
+                "submitting the next frame (frame order is the cache "
+                "recurrence; concurrent sessions, not concurrent frames, "
+                "fill dispatch lanes)")
+        frame = _check_frame(frame, self._n_points)
+        decision = self._state.decide(frame)
+        # May raise (e.g. fleet admission Overloaded) — commit after.
+        fut = self._submit_fn(frame, self._state, decision == "hit")
+        self._state.commit(decision)
+        self._pending = fut
+        return fut
+
+
+def replay_reference(pipeline, frames, *, seed: int = 0,
+                     max_age: Optional[int] = None,
+                     resets=()):
+    """The stateless oracle for the streaming contract.
+
+    Replays the session decision recurrence over ``frames`` with **no
+    carried device state**: for every hit frame the key frame's cache
+    is recomputed from scratch (``infer_collect``) and replayed; every
+    miss frame runs the plain cold path (``infer``).  A
+    :class:`StreamSession` over the same schedule must produce
+    bit-identical logits for every frame — the golden and hypothesis
+    suites assert exactly that.
+
+    Args:
+      resets: frame indices before which an explicit ``reset()`` is
+        simulated (the matching session calls ``session.reset()``
+        before submitting that frame).
+
+    Returns: list of per-frame logits rows.
+    """
+    _require_streaming(pipeline)
+    spec = pipeline.spec
+    n_points = pipeline.model_config.n_points
+    batch = max(1, spec.data_shards)
+    lfsr0 = pipeline.seed_state(seed, batch)
+    resets = set(resets)
+    frames = [_check_frame(f, n_points) for f in frames]
+    out = []
+    key_j: Optional[int] = None
+    age = 0
+    for i, frame in enumerate(frames):
+        if i in resets:
+            key_j = None
+        if key_j is None:
+            decision = "miss"
+        elif max_age is not None and age >= max_age:
+            decision = "miss"
+        elif float(np.max(np.linalg.norm(frame - frames[key_j], axis=-1))
+                   ) > spec.stream_drift_threshold:
+            decision = "miss"
+        else:
+            decision = "hit"
+        pts = jnp.asarray(np.broadcast_to(frame[None],
+                                          (batch,) + frame.shape))
+        if decision == "hit":
+            key = frames[key_j]
+            key_pts = jnp.asarray(np.broadcast_to(key[None],
+                                                  (batch,) + key.shape))
+            _, _, cache = pipeline.infer_collect(key_pts,
+                                                 jnp.array(lfsr0))
+            logits, _ = pipeline.infer_cached(pts, jnp.array(lfsr0),
+                                              cache)
+            age += 1
+        else:
+            logits, _ = pipeline.infer(pts, jnp.array(lfsr0))
+            key_j, age = i, 0
+        out.append(logits[0])
+    return out

@@ -19,6 +19,7 @@ regression gate all consume the same run):
     measured_sps    num?  measured samples/sec (None = estimate-only)
     err_vs_fp32     num?  accuracy proxy vs the fp32-ref anchor
     shed_rate       num?  fleet rows: shed fraction of offered requests
+    cache_hit_rate  num?  stream rows: temporal-cache hit fraction
     frontier        bool  row is on the measured Pareto frontier
     anchor          bool  row is the fp32-ref reference point
     spec            dict? searched spec fields (human provenance)
@@ -40,7 +41,7 @@ from typing import Any, Dict, List, Optional
 SCHEMA = "repro.bench/v1"
 
 _NUMERIC_KEYS = ("us_per_call", "estimated_sps", "measured_sps",
-                 "err_vs_fp32", "shed_rate")
+                 "err_vs_fp32", "shed_rate", "cache_hit_rate")
 _BOOL_KEYS = ("frontier", "anchor")
 
 
@@ -56,6 +57,7 @@ def new_row(name: str, *, fingerprint: Optional[str] = None,
             measured_sps: Optional[float] = None,
             err_vs_fp32: Optional[float] = None,
             shed_rate: Optional[float] = None,
+            cache_hit_rate: Optional[float] = None,
             frontier: bool = False, anchor: bool = False,
             spec: Optional[Dict[str, Any]] = None,
             stages: Optional[List[Dict[str, Any]]] = None) -> Dict[str, Any]:
@@ -64,6 +66,7 @@ def new_row(name: str, *, fingerprint: Optional[str] = None,
             "us_per_call": us_per_call, "derived": derived,
             "estimated_sps": estimated_sps, "measured_sps": measured_sps,
             "err_vs_fp32": err_vs_fp32, "shed_rate": shed_rate,
+            "cache_hit_rate": cache_hit_rate,
             "frontier": bool(frontier), "anchor": bool(anchor),
             "spec": spec, "stages": stages}
 

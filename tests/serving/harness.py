@@ -116,6 +116,69 @@ def run_trace(engine, trace: Sequence[Arrival], clock: VirtualClock,
 
 
 # ---------------------------------------------------------------------------
+# streaming traces
+# ---------------------------------------------------------------------------
+
+def stream_steady(frames: Sequence, gap_ms: float = 5.0,
+                  start_ms: float = 0.0, session: int = 0
+                  ) -> List[Arrival]:
+    """One stream session's frames at a steady video-rate cadence —
+    the hit-heavy temporal-cache case.  The ``tenant`` slot carries the
+    integer session index for :func:`run_stream_trace`."""
+    return [Arrival(start_ms + i * gap_ms, f, tenant=session)
+            for i, f in enumerate(frames)]
+
+
+def stream_burst_reset(frames: Sequence, burst: int = 4,
+                       burst_gap_ms: float = 50.0, session: int = 0):
+    """Frames arriving in bursts with an explicit session ``reset()``
+    scripted at every burst boundary — the re-key / occlusion-recovery
+    case.  Returns ``(trace, resets)`` for :func:`run_stream_trace`.
+    """
+    trace = [Arrival((i // burst) * burst_gap_ms, f, tenant=session)
+             for i, f in enumerate(frames)]
+    resets = frozenset((session, i)
+                       for i in range(burst, len(frames), burst))
+    return trace, resets
+
+
+def run_stream_trace(engine, sessions: Sequence, trace: Sequence[Arrival],
+                     clock: VirtualClock, resets=frozenset(),
+                     tick_ms: float = 1.0) -> List[List]:
+    """Drive stream sessions through a scripted frame trace — zero
+    sleeps, deterministic.
+
+    ``sessions[i]`` (from ``engine.open_stream()`` /
+    ``fleet.open_stream(tenant)``) serves arrivals whose ``tenant``
+    slot holds the integer ``i``; ``engine`` is whatever owns
+    ``pump()``/``flush()`` (engine or fleet).  A session holds at most
+    one unresolved frame — its frame order *is* the cache recurrence —
+    so the driver flushes before a session's next submit when the
+    previous frame is still pending.  ``resets`` is a set of
+    ``(session_idx, frame_idx)`` pairs: that session's ``reset()`` runs
+    immediately before it submits its ``frame_idx``-th frame.
+
+    Returns per-session future lists, in frame order.
+    """
+    futures: List[List] = [[] for _ in sessions]
+    for arrival in sorted(trace, key=lambda a: (a.t_ms, a.tenant or 0)):
+        target_s = arrival.t_ms / 1e3
+        assert target_s >= clock(), "trace arrivals must not precede clock"
+        while clock() < target_s:
+            clock.advance(min(tick_ms / 1e3, target_s - clock()))
+            engine.pump()
+        i = arrival.tenant or 0
+        if futures[i] and not futures[i][-1].done():
+            engine.flush()
+        if (i, len(futures[i])) in resets:
+            sessions[i].reset()
+        futures[i].append(sessions[i].submit(arrival.cloud))
+        engine.pump()
+    engine.flush()
+    return futures
+
+
+# ---------------------------------------------------------------------------
 # multi-tenant fleet traces
 # ---------------------------------------------------------------------------
 

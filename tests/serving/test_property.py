@@ -112,3 +112,77 @@ def test_fleet_routing_delivers_exactly_once(
         np.testing.assert_array_equal(
             np.asarray(fut.result()),
             solo_reference(arrival.cloud, spec.max_batch))
+
+
+# ---------------------------------------------------------------------------
+# streaming: cache schedules are invisible in the results
+# ---------------------------------------------------------------------------
+
+_THRESH = 0.05
+
+
+@pytest.fixture(scope="module")
+def stream_pipeline(tiny_params):
+    from harness import tiny_serving_spec
+
+    from repro.api.build import build
+    return build(tiny_serving_spec(stream=True,
+                                   stream_drift_threshold=_THRESH),
+                 tiny_params)
+
+
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.function_scoped_fixture])
+@given(jumps=st.lists(st.booleans(), min_size=1, max_size=5),
+       resets=st.sets(st.integers(min_value=0, max_value=5)),
+       max_age=st.sampled_from([None, 1, 3]))
+def test_stream_equals_stateless_replay(stream_pipeline, clouds,
+                                        jumps, resets, max_age):
+    """For *any* drift/reset schedule over a bounded frame count, a
+    stream session's output equals the stateless decision-matched
+    replay exactly, and every frame is delivered exactly once.
+
+    Frames are built by pure translations, so the drift metric is the
+    translation magnitude *exactly*: hypothesis controls the hit/miss
+    schedule (0.01 << threshold << 0.2), plus arbitrary explicit
+    resets and age-based eviction.
+    """
+    from harness import run_stream_trace, stream_steady
+
+    from repro.serve.async_engine import AsyncPointCloudEngine
+    from repro.serve.streaming import replay_reference
+
+    step = np.float32([1.0, 1.0, 1.0]) / np.sqrt(3.0)
+    frames = [np.asarray(clouds[0], np.float32)]
+    for jump in jumps:
+        mag = 0.2 if jump else 0.01
+        frames.append(frames[-1] + mag * step)
+
+    ref = replay_reference(stream_pipeline, frames, seed=SEED,
+                           max_age=max_age, resets=resets)
+
+    clock = VirtualClock()
+    eng = AsyncPointCloudEngine(stream_pipeline, max_batch=4,
+                                policy="fixed", seed=SEED, clock=clock)
+    sess = eng.open_stream(max_age=max_age)
+    futs = run_stream_trace(eng, [sess], stream_steady(frames), clock,
+                            resets={(0, i) for i in resets})[0]
+
+    # exactly once: one resolved future per frame, nothing held back
+    delivered = []
+    for fut in futs:
+        fut.add_done_callback(lambda f: delivered.append(f.request_id))
+    assert len(futs) == len(frames)
+    assert sorted(delivered) == sorted(set(delivered))
+    assert len(delivered) == len(frames)
+    assert eng.pending == 0
+
+    # bit-identical to the stateless replay, frame by frame
+    for i, fut in enumerate(futs):
+        np.testing.assert_array_equal(np.asarray(fut.result()),
+                                      np.asarray(ref[i]))
+
+    stats = sess.stats
+    assert stats.frames == len(frames)
+    assert stats.hits + stats.misses == stats.frames
+    assert stats.resets == len([i for i in resets if i < len(frames)])

@@ -1,0 +1,326 @@
+"""Streaming golden suite: the temporal cache is bit-identical to the
+stateless cold path.
+
+The contract under test (``repro.serve.streaming``): every frame a
+stream session serves — cache hit or miss — equals the stateless
+decision-matched oracle ``replay_reference`` *exactly* (bitwise), for
+every precision (fp32-ref / pallas-interpret / int8), every transport
+(direct session / sync engine / async engine / fleet), and under the
+forced-8-device data-parallel dispatch (the CI forced-8 step runs this
+file).  Plus the seg-head sync-vs-async parity and the reset /
+max-age-eviction edge cases.
+
+All engine-driven cases run on the virtual clock (zero sleeps).
+"""
+import jax
+import numpy as np
+import pytest
+from harness import (SEED, TINY, VirtualClock, run_stream_trace,
+                     stream_burst_reset, stream_steady, tiny_serving_spec)
+
+from repro.api.build import build
+from repro.data import pointclouds
+from repro.serve.async_engine import AsyncPointCloudEngine
+from repro.serve.pointcloud import PointCloudEngine
+from repro.serve.streaming import StreamSession, replay_reference
+
+THRESH = 0.05
+
+PRECISIONS = {
+    "fp32-ref": dict(precision="fp32", backend="ref"),
+    "pallas-interpret": dict(precision="fp32", backend="pallas_interpret"),
+    "int8": dict(precision="int8", backend="ref"),
+}
+
+
+def stream_spec(**over):
+    over.setdefault("stream", True)
+    over.setdefault("stream_drift_threshold", THRESH)
+    return tiny_serving_spec(**over)
+
+
+def bitwise(a, b) -> bool:
+    a, b = np.asarray(a), np.asarray(b)
+    return a.shape == b.shape and bool((a == b).all())
+
+
+@pytest.fixture(scope="module")
+def frames():
+    """Seven frames with a known mixed schedule: two coherent runs
+    (drift well under THRESH -> hits) joined by a shape change (drift
+    far over THRESH -> miss), so every schedule exercises both cache
+    paths."""
+    lo, _ = pointclouds.make_stream(jax.random.PRNGKey(2),
+                                    TINY["n_points"], 4, drift=0.01)
+    hi, _ = pointclouds.make_stream(jax.random.PRNGKey(3),
+                                    TINY["n_points"], 3, drift=0.01)
+    return [np.asarray(f) for f in lo] + [np.asarray(f) for f in hi]
+
+
+@pytest.fixture(scope="module", params=sorted(PRECISIONS),
+                ids=sorted(PRECISIONS))
+def stream_pipe(request, tiny_params):
+    return build(stream_spec(**PRECISIONS[request.param]), tiny_params)
+
+
+@pytest.fixture(scope="module")
+def oracle(stream_pipe, frames):
+    """Stateless reference logits per frame (recomputed-from-scratch
+    key caches, no carried device state)."""
+    return [np.asarray(r)
+            for r in replay_reference(stream_pipe, frames, seed=SEED)]
+
+
+# ---------------------------------------------------------------------------
+# golden equivalence: precision x transport
+# ---------------------------------------------------------------------------
+
+class TestGolden:
+    def test_direct_session_matches_oracle(self, stream_pipe, frames,
+                                           oracle):
+        sess = StreamSession(stream_pipe, seed=SEED)
+        for i, f in enumerate(frames):
+            assert bitwise(sess.infer(f), oracle[i]), f"frame {i}"
+        # the fixed schedule exercises both paths
+        assert sess.stats.hits > 0 and sess.stats.misses > 0
+        assert sess.stats.frames == len(frames)
+
+    def test_sync_engine_stream_matches_oracle(self, tiny_params,
+                                               stream_pipe, frames,
+                                               oracle):
+        # The engine wraps the same frozen pipeline spec; its session
+        # restarts every frame from the engine seed, so interleaved
+        # queue traffic cannot perturb stream results.
+        eng = PointCloudEngine(tiny_params, stream_pipe.spec,
+                               max_batch=4, seed=SEED)
+        sess = eng.open_stream()
+        for i, f in enumerate(frames):
+            out = sess.infer(f)
+            if i == 2:   # queue traffic between frames
+                eng.classify(np.stack(frames[:3]))
+            assert bitwise(out, oracle[i]), f"frame {i}"
+
+    def test_async_engine_streams_match_oracle(self, stream_pipe,
+                                               frames, oracle):
+        # Two concurrent sessions co-batching with plain traffic.
+        clock = VirtualClock()
+        eng = AsyncPointCloudEngine(stream_pipe, max_batch=4,
+                                    policy="fixed", seed=SEED,
+                                    clock=clock)
+        s0, s1 = eng.open_stream(), eng.open_stream()
+        plain = []
+        outs0, outs1 = [], []
+        for i, f in enumerate(frames):
+            f0, f1 = s0.submit(f), s1.submit(f)
+            plain.append(eng.submit(frames[0]))
+            eng.flush()
+            outs0.append(f0.result())
+            outs1.append(f1.result())
+        for i in range(len(frames)):
+            assert bitwise(outs0[i], oracle[i]), f"session 0 frame {i}"
+            assert bitwise(outs1[i], oracle[i]), f"session 1 frame {i}"
+        # plain requests on a streaming pipeline keep their own golden
+        # contract: every one equals the frame-0 cold logits
+        for fut in plain:
+            assert bitwise(fut.result(), oracle[0])
+        assert s0.stats.hits > 0 and s0.stats.misses > 0
+
+
+# ---------------------------------------------------------------------------
+# forced-8-device data-parallel dispatch (CI forced-8 step)
+# ---------------------------------------------------------------------------
+
+class TestSharded:
+    @pytest.fixture(scope="class")
+    def pipe8(self, tiny_params):
+        if len(jax.devices()) < 8:
+            pytest.skip("needs 8 devices "
+                        "(XLA_FLAGS=--xla_force_host_platform_"
+                        "device_count=8)")
+        return build(stream_spec(data_shards=8), tiny_params)
+
+    def test_sharded_stream_matches_single_device(self, pipe8,
+                                                  tiny_params, frames):
+        pipe1 = build(stream_spec(), tiny_params)
+        ref = [np.asarray(r)
+               for r in replay_reference(pipe1, frames, seed=SEED)]
+        sess = StreamSession(pipe8, seed=SEED)   # batch = 8 lanes
+        for i, f in enumerate(frames):
+            assert bitwise(sess.infer(f), ref[i]), f"frame {i}"
+        assert sess.stats.hits > 0
+
+    def test_sharded_async_stream(self, pipe8, frames):
+        clock = VirtualClock()
+        eng = AsyncPointCloudEngine(pipe8, max_batch=8, policy="fixed",
+                                    seed=SEED, clock=clock)
+        sess = eng.open_stream()
+        ref = [np.asarray(r)
+               for r in replay_reference(pipe8, frames, seed=SEED)]
+        trace = stream_steady(frames)
+        futs = run_stream_trace(eng, [sess], trace, clock)[0]
+        for i, fut in enumerate(futs):
+            assert bitwise(fut.result(), ref[i]), f"frame {i}"
+
+
+# ---------------------------------------------------------------------------
+# segmentation head
+# ---------------------------------------------------------------------------
+
+class TestSegHead:
+    @pytest.fixture(scope="class")
+    def seg_pipe(self):
+        from repro.models import pointmlp as PM
+        spec = stream_spec(head="seg")
+        params = PM.pointmlp_init(jax.random.PRNGKey(0),
+                                  spec.to_model_config())
+        return build(spec, params)
+
+    def test_seg_sync_vs_async_parity(self, seg_pipe, frames):
+        spec = seg_pipe.spec
+        sync_sess = StreamSession(seg_pipe, seed=SEED)
+        sync_out = [np.asarray(sync_sess.infer(f)) for f in frames]
+        assert sync_out[0].shape == (spec.n_points, spec.n_classes)
+
+        clock = VirtualClock()
+        eng = AsyncPointCloudEngine(seg_pipe, max_batch=4,
+                                    policy="fixed", seed=SEED,
+                                    clock=clock)
+        sess = eng.open_stream()
+        futs = run_stream_trace(eng, [sess],
+                                stream_steady(frames), clock)[0]
+        for i, fut in enumerate(futs):
+            assert bitwise(fut.result(), sync_out[i]), f"frame {i}"
+        assert sync_sess.stats.hits > 0
+
+    def test_seg_matches_oracle(self, seg_pipe, frames):
+        ref = replay_reference(seg_pipe, frames, seed=SEED)
+        sess = StreamSession(seg_pipe, seed=SEED)
+        for i, f in enumerate(frames):
+            assert bitwise(sess.infer(f), ref[i]), f"frame {i}"
+
+    def test_seg_sync_engine_empty_queue_shape(self, seg_pipe):
+        from repro.serve.pointcloud import PointCloudEngine
+        eng = PointCloudEngine(seg_pipe.params, seg_pipe.spec,
+                               max_batch=4, seed=SEED)
+        out = eng.classify(np.zeros((0, seg_pipe.spec.n_points, 3),
+                                    np.float32))
+        assert out.shape == (0, seg_pipe.spec.n_points,
+                             seg_pipe.spec.n_classes)
+
+
+# ---------------------------------------------------------------------------
+# cache lifecycle edge cases
+# ---------------------------------------------------------------------------
+
+class TestLifecycle:
+    @pytest.fixture(scope="class")
+    def pipe(self, tiny_params):
+        return build(stream_spec(), tiny_params)
+
+    @pytest.fixture(scope="class")
+    def coherent(self):
+        """Six low-drift frames: all hits after frame 0 unless a reset
+        or eviction intervenes."""
+        seq, _ = pointclouds.make_stream(jax.random.PRNGKey(5),
+                                         TINY["n_points"], 6,
+                                         drift=0.01)
+        return [np.asarray(f) for f in seq]
+
+    def test_reset_forces_full_recompute(self, pipe, coherent):
+        resets = (3,)
+        ref = replay_reference(pipe, coherent, seed=SEED, resets=resets)
+        sess = StreamSession(pipe, seed=SEED)
+        for i, f in enumerate(coherent):
+            if i in resets:
+                sess.reset()
+            assert bitwise(sess.infer(f), ref[i]), f"frame {i}"
+        assert sess.stats.resets == 1
+        # frames 0 and 3 recompute, everything else hits
+        assert sess.stats.misses == 2
+        assert sess.stats.hits == len(coherent) - 2
+
+    def test_max_age_evicts_and_stays_exact(self, pipe, coherent):
+        ref = replay_reference(pipe, coherent, seed=SEED, max_age=2)
+        sess = StreamSession(pipe, seed=SEED, max_age=2)
+        for i, f in enumerate(coherent):
+            assert bitwise(sess.infer(f), ref[i]), f"frame {i}"
+        assert sess.stats.evictions > 0
+        assert sess.stats.misses == sess.stats.evictions + 1
+
+    def test_burst_reset_trace_async(self, pipe, coherent):
+        clock = VirtualClock()
+        eng = AsyncPointCloudEngine(pipe, max_batch=4, policy="fixed",
+                                    seed=SEED, clock=clock)
+        sess = eng.open_stream()
+        trace, resets = stream_burst_reset(coherent, burst=3)
+        reset_idx = tuple(i for (_, i) in resets)
+        ref = replay_reference(pipe, coherent, seed=SEED,
+                               resets=reset_idx)
+        futs = run_stream_trace(eng, [sess], trace, clock,
+                                resets=resets)[0]
+        # exactly-once delivery: one resolved future per frame
+        assert len(futs) == len(coherent)
+        assert all(f.done() for f in futs)
+        for i, fut in enumerate(futs):
+            assert bitwise(fut.result(), ref[i]), f"frame {i}"
+        assert sess.stats.resets == len(reset_idx)
+
+    def test_async_one_frame_in_flight(self, pipe, coherent):
+        clock = VirtualClock()
+        eng = AsyncPointCloudEngine(pipe, max_batch=4, policy="fixed",
+                                    seed=SEED, clock=clock)
+        sess = eng.open_stream()
+        sess.submit(coherent[0])
+        with pytest.raises(RuntimeError, match="in flight"):
+            sess.submit(coherent[1])
+        eng.flush()
+        sess.submit(coherent[1])    # resolves -> next frame admitted
+        eng.flush()
+
+    def test_requires_streaming_pipeline(self, tiny_pipeline):
+        with pytest.raises(ValueError, match="stream=True"):
+            StreamSession(tiny_pipeline, seed=SEED)
+        eng = AsyncPointCloudEngine(tiny_pipeline, max_batch=4,
+                                    policy="fixed", seed=SEED)
+        with pytest.raises(ValueError, match="stream=True"):
+            eng.open_stream()
+
+    def test_frame_shape_checked(self, pipe):
+        sess = StreamSession(pipe, seed=SEED)
+        with pytest.raises(ValueError, match="one \\[N="):
+            sess.infer(np.zeros((3, 3), np.float32))
+
+    def test_spec_validation(self):
+        with pytest.raises(ValueError, match="stream_drift_threshold"):
+            stream_spec(stream_drift_threshold=-0.5)
+        with pytest.raises(ValueError, match="fused_group"):
+            build_spec = stream_spec(fused_group="group_transfer")
+            build_spec.validate()
+
+
+# ---------------------------------------------------------------------------
+# fleet transport
+# ---------------------------------------------------------------------------
+
+class TestFleetStream:
+    def test_fleet_stream_matches_oracle(self, tiny_params, frames,
+                                         monkeypatch):
+        from repro.api import FleetSpec, TenantSpec, build_pool
+        from repro.serve.fleet import PipelineFleet
+        sspec = stream_spec(name="tiny-stream")
+        fspec = FleetSpec(
+            pipelines=(sspec,), replicas=2, max_batch=4,
+            tenants=(TenantSpec("rt", "tiny-stream", slo_ms=0.0),))
+        pool = build_pool(fspec.pool_specs(), {"tiny-stream": tiny_params})
+        clock = VirtualClock()
+        fleet = PipelineFleet(pool, fspec, seed=SEED, clock=clock)
+        sess = fleet.open_stream("rt")
+        ref = [np.asarray(r)
+               for r in replay_reference(pool[0], frames, seed=SEED)]
+        futs = run_stream_trace(fleet, [sess],
+                                stream_steady(frames), clock)[0]
+        for i, fut in enumerate(futs):
+            assert bitwise(fut.result(), ref[i]), f"frame {i}"
+        # admitted through the normal tenant accounting
+        assert fleet.tenants["rt"].submitted == len(frames)
+        assert sess.stats.hits > 0

@@ -311,6 +311,28 @@ class TestBenchDiff:
         _, better = bd.diff_rows(old, doc(0.0, "ddd"))
         assert better == []
 
+    def test_cache_hit_rate_drop_flagged(self):
+        """The stream gate points the opposite way from shed: a hit
+        rate *drop* is the regression, a rise never is."""
+        bd = _load_bench_diff()
+
+        def doc(rate, rev):
+            return new_artifact(
+                [new_row("stream_cached", measured_sps=100.0,
+                         cache_hit_rate=rate)], rev=rev)
+
+        old = doc(0.90, "aaa")
+        _, ok = bd.diff_rows(old, doc(0.85, "bbb"))     # -0.05 within
+        assert ok == []
+        _, bad = bd.diff_rows(old, doc(0.50, "ccc"))    # -0.40 beyond
+        assert len(bad) == 1 and "cache_hit_rate" in bad[0]
+        # hitting more often never regresses
+        _, better = bd.diff_rows(old, doc(1.0, "ddd"))
+        assert better == []
+        # a tightened tolerance catches the small drop too
+        _, strict = bd.diff_rows(old, doc(0.85, "bbb"), hit_tol=0.01)
+        assert len(strict) == 1 and "cache_hit_rate" in strict[0]
+
     def test_new_and_gone_rows_pass(self):
         bd = _load_bench_diff()
         old, new = self._doc(), self._doc(rev="bbb")
@@ -346,3 +368,26 @@ class TestBenchDiff:
         malformed = run(str(stale), str(a))
         assert malformed.returncode == 2
         assert "repro.bench/v1" in malformed.stderr
+
+    def test_cli_hit_tol_gate(self, tmp_path):
+        """``--hit-tol`` drives the exit code: a hit-rate drop inside
+        the default tolerance passes, the same drop fails once the
+        flag tightens it."""
+        def doc(rate, rev):
+            return new_artifact(
+                [new_row("stream_cached", measured_sps=100.0,
+                         cache_hit_rate=rate)], rev=rev)
+        a = _write(tmp_path, "BENCH_a.json", doc(0.94, "aaa"))
+        b = _write(tmp_path, "BENCH_b.json", doc(0.88, "bbb"))
+
+        def run(*argv):
+            return subprocess.run(
+                [sys.executable, str(_BENCH_DIFF), *argv],
+                capture_output=True, text=True,
+                env={**__import__("os").environ,
+                     "PYTHONPATH": str(_ROOT / "src")})
+        ok = run(str(a), str(b))                       # -0.06 < 0.10
+        assert ok.returncode == 0, ok.stderr
+        strict = run(str(a), str(b), "--hit-tol", "0.02")
+        assert strict.returncode == 1
+        assert "cache_hit_rate" in strict.stdout
