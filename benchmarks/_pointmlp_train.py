@@ -8,7 +8,6 @@ variants, not absolute ModelNet40 numbers (EXPERIMENTS.md §Paper).
 """
 from __future__ import annotations
 
-import functools
 import time
 from typing import Dict, Tuple
 

@@ -10,10 +10,9 @@ import json
 import pathlib
 
 from repro.core import compress as CP
-from repro.core import quant as Q
 from repro.models import pointmlp as PM
 
-from benchmarks._pointmlp_train import scale_down, train_eval, evaluate
+from benchmarks._pointmlp_train import scale_down, train_eval
 
 
 def run(parent_steps: int = 150, qat_steps: int = 60,

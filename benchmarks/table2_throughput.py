@@ -12,7 +12,6 @@ import json
 import pathlib
 
 from repro import roofline as RL
-from repro.core import quant as Q
 from repro.models import pointmlp as PM
 
 

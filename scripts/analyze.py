@@ -1,0 +1,21 @@
+#!/usr/bin/env python
+"""Shim for ``python -m repro.analysis`` (the static plan verifier).
+
+    python scripts/analyze.py --all-variants
+
+Adds ``src/`` to ``sys.path`` when the package is not installed, then
+delegates to :func:`repro.analysis.__main__.main` verbatim — same
+flags, same findings, same exit status.
+"""
+import pathlib
+import sys
+
+try:
+    from repro.analysis.__main__ import main
+except ImportError:
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                           / "src"))
+    from repro.analysis.__main__ import main
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,69 @@
+"""``repro.analysis`` — static plan verification before build.
+
+A finding-based pass framework over ``PipelineSpec`` -> ``StagePlan``
+-> traced jaxprs: every invariant the pipeline framework enforces is a
+named ``RPAxxx`` code (``repro.analysis.findings.CODES``), produced by
+a registered pass and enforced through one raise/warn path shared by
+``spec.validate()``, ``lower()``, ``build()`` and ``shard_forward()``.
+
+    python -m repro.analysis --all-variants    # CI gate
+    scripts/analyze.py                         # shim
+
+Layering: ``findings`` is stdlib-only (safe to import from anywhere);
+``passes`` pulls in ``repro.api``; ``trace``/``contracts`` pull in jax
+and are imported lazily here so ``import repro.analysis`` stays cheap.
+"""
+from repro.analysis.findings import (  # noqa: F401 — the public surface
+    CODES,
+    ERROR,
+    INFO,
+    WARNING,
+    AnalysisWarning,
+    Finding,
+    dedupe,
+    enforce,
+    error_codes,
+    finding,
+    format_findings,
+    has_errors,
+    warn_finding,
+)
+
+
+def analyze_spec(spec, scopes=None):
+    """See :func:`repro.analysis.passes.analyze_spec`."""
+    from repro.analysis.passes import analyze_spec as _impl
+    return _impl(spec, scopes=scopes)
+
+
+def analyze_fleet_spec(fleet_spec):
+    """See :func:`repro.analysis.passes.analyze_fleet_spec`."""
+    from repro.analysis.passes import analyze_fleet_spec as _impl
+    return _impl(fleet_spec)
+
+
+def enforce_spec(spec, scopes=None, stacklevel: int = 3):
+    """See :func:`repro.analysis.passes.enforce_spec`."""
+    from repro.analysis.passes import enforce_spec as _impl
+    return _impl(spec, scopes=scopes, stacklevel=stacklevel + 1)
+
+
+def analyze_plan_trace(spec, cfg=None, plan=None):
+    """See :func:`repro.analysis.trace.analyze_plan_trace` (jax-lazy)."""
+    from repro.analysis.trace import analyze_plan_trace as _impl
+    return _impl(spec, cfg=cfg, plan=plan)
+
+
+def check_registry_contracts():
+    """See :func:`repro.analysis.contracts.check_registry_contracts`
+    (jax-lazy)."""
+    from repro.analysis.contracts import check_registry_contracts as _impl
+    return _impl()
+
+
+__all__ = [
+    "CODES", "ERROR", "WARNING", "INFO", "AnalysisWarning", "Finding",
+    "dedupe", "enforce", "error_codes", "finding", "format_findings",
+    "has_errors", "warn_finding", "analyze_spec", "analyze_fleet_spec",
+    "enforce_spec", "analyze_plan_trace", "check_registry_contracts",
+]

@@ -1,0 +1,186 @@
+"""``python -m repro.analysis`` — the static plan-verification CLI.
+
+Sweeps the shipped variant helpers (elite / m2 / lite, plus the
+compression ladder, the streaming/segmentation variants and a fleet
+pool spec under ``--all-variants``) through every analysis layer:
+
+  1. spec passes       (repro.analysis.passes — all scopes)
+  2. registry contracts (repro.analysis.contracts)
+  3. jaxpr traces      (repro.analysis.trace — per variant)
+  4. plan-space sweep  (raw enumeration around each base: every
+     analyzer-clean candidate must lower; pruned candidates are
+     reported per finding code)
+
+Exit status is nonzero iff any error-severity finding was produced —
+the CI ``analyze`` step runs this before the test jobs.  A single spec
+can be checked with ``--spec-json`` (field overrides on ``--base``),
+which is how the tests pin exact RPA codes for known-bad shapes::
+
+    python -m repro.analysis --spec-json '{"data_shards": 8}'  # RPA020
+"""
+from __future__ import annotations
+
+import argparse
+import itertools
+import json
+import sys
+import warnings
+from collections import Counter
+from typing import List
+
+from repro.analysis import findings as F
+
+
+def _analyze_one(spec, args, out: List[F.Finding]) -> None:
+    from repro.analysis.passes import analyze_spec
+    found = analyze_spec(spec)
+    _report(f"spec {spec.name}", found, args)
+    out.extend(found)
+    if not args.no_trace and not F.has_errors(found):
+        from repro.analysis.trace import analyze_plan_trace
+        traced = analyze_plan_trace(spec)
+        _report(f"trace {spec.name}", traced, args)
+        out.extend(traced)
+
+
+def _report(title: str, found: List[F.Finding], args) -> None:
+    errs = sum(f.severity == F.ERROR for f in found)
+    warns = sum(f.severity == F.WARNING for f in found)
+    if not args.quiet or errs:
+        status = "ok" if not errs else f"{errs} error(s)"
+        extra = f", {warns} warning(s)" if warns else ""
+        print(f"== {title}: {status}{extra}")
+    for f in found:
+        if f.severity == F.ERROR or not args.quiet:
+            print(f"   {f}")
+
+
+def _sweep(base, args, out: List[F.Finding]) -> None:
+    """Raw product of the quick search axes around ``base``: clean
+    candidates must lower (RPA298 if not); pruned ones are counted per
+    code — the autotuner's drop-list, made visible."""
+    from repro.api import plan as plan_mod
+    from repro.analysis.passes import analyze_spec
+    axes = itertools.product(
+        plan_mod.DEFAULT_STAGE_PRECISIONS,
+        (("ref",) * 4, ("pallas_interpret",) * 4),
+        ("none", "grouped_transfer"))
+    n_clean, pruned = 0, Counter()
+    for sp, sb, fg in axes:
+        spec = base.replace(stage_precision=sp, stage_backend=sb,
+                            fused_group=fg)
+        found = analyze_spec(spec, scopes=("lowering",))
+        if found:
+            for f in found:
+                pruned[f.code] += 1
+            continue
+        n_clean += 1
+        try:
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore")
+                plan_mod.lower(spec, spec.to_model_config())
+        except Exception as e:  # noqa: BLE001 — drift is the finding
+            out.append(F.finding(
+                "RPA298", f"sweep[{base.name}]",
+                f"analyzer-clean candidate failed to lower: "
+                f"{type(e).__name__}: {e} "
+                f"(stage_precision={sp}, stage_backend={sb[0]}, "
+                f"fused_group={fg})"))
+    codes = ", ".join(f"{c} x{n}" for c, n in sorted(pruned.items()))
+    if not args.quiet:
+        print(f"== sweep around {base.name}: {n_clean} candidates "
+              f"lower clean; pruned by code: {codes or 'none'}")
+
+
+def _fleet_spec():
+    from repro.api.spec import FleetSpec, TenantSpec, elite_spec, lite_spec
+    elite = elite_spec().serving(policy="deadline", slo_ms=50.0)
+    lite = lite_spec().serving(policy="cost", slo_ms=20.0)
+    return FleetSpec(
+        name="analyze-fleet", pipelines=(elite, lite),
+        tenants=(TenantSpec(name="batch", tier=elite.name, slo_ms=0.0),
+                 TenantSpec(name="realtime", tier=lite.name, slo_ms=20.0)),
+        replicas=1, router="least-loaded", max_batch=8)
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static plan verification: prove pipeline "
+                    "invariants before build.")
+    parser.add_argument("--all-variants", action="store_true",
+                        help="sweep every variant helper (ladder, "
+                             "stream, seg, fleet) + the plan-space "
+                             "product, not just elite/m2/lite")
+    parser.add_argument("--base", default="lite",
+                        choices=("elite", "m2", "lite"),
+                        help="base variant --spec-json overrides apply "
+                             "to (default: lite)")
+    parser.add_argument("--spec-json", default=None, metavar="JSON",
+                        help="analyze one spec: JSON field overrides "
+                             "on --base (e.g. '{\"data_shards\": 8}')")
+    parser.add_argument("--no-trace", action="store_true",
+                        help="skip the jaxpr trace passes")
+    parser.add_argument("--no-contracts", action="store_true",
+                        help="skip the registry contract checks")
+    parser.add_argument("-q", "--quiet", action="store_true",
+                        help="errors only")
+    args = parser.parse_args(argv)
+
+    from repro.api.spec import elite_spec, lite_spec, m2_spec
+    bases = {"elite": elite_spec, "m2": m2_spec, "lite": lite_spec}
+    out: List[F.Finding] = []
+
+    if args.spec_json is not None:
+        overrides = json.loads(args.spec_json)
+        overrides = {k: tuple(v) if isinstance(v, list) else v
+                     for k, v in overrides.items()}
+        try:
+            spec = bases[args.base]().replace(**overrides)
+        except (TypeError, ValueError) as e:
+            # Shape errors the frozen dataclass itself rejects are
+            # pre-analysis; report and fail without a finding code.
+            print(f"spec construction failed: {e}")
+            return 1
+        _analyze_one(spec, args, out)
+    else:
+        variants = [fn() for fn in bases.values()]
+        if args.all_variants:
+            from repro.api.spec import compression_ladder_specs
+            seen = {s.name for s in variants}
+            variants += [s for s in compression_ladder_specs()
+                         if s.name not in seen]
+            variants.append(lite_spec(name="pointmlp-lite-stream").replace(
+                stream=True, stream_drift_threshold=0.05))
+            variants.append(m2_spec(name="pointmlp-m2-seg").replace(
+                head="seg"))
+        for spec in variants:
+            _analyze_one(spec, args, out)
+        if not args.no_contracts:
+            from repro.analysis.contracts import check_registry_contracts
+            found = check_registry_contracts()
+            _report("registry contracts", found, args)
+            out.extend(found)
+        if args.all_variants:
+            from repro.analysis.passes import (analyze_fleet_spec,
+                                               skip_list_findings)
+            found = analyze_fleet_spec(_fleet_spec())
+            _report("fleet spec", found, args)
+            out.extend(found)
+            for fn in bases.values():
+                _sweep(fn().serving(), args, out)
+            skips = skip_list_findings()
+            out.extend(skips)
+            if not args.quiet:
+                print(f"== RPA-skip list: {len(skips)} seed config "
+                      f"modules excluded (RPA900)")
+
+    errs = [f for f in out if f.severity == F.ERROR]
+    codes = ", ".join(F.error_codes(out)) or "none"
+    print(f"SUMMARY: {len(out)} finding(s), {len(errs)} error(s) "
+          f"[codes: {codes}]")
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

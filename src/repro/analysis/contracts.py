@@ -1,0 +1,223 @@
+"""Determinism-contract checks for registry entries.
+
+The registries carry *declared* metadata the serving stack trusts:
+samplers declare ``advances_state`` (the stream cache replays indices
+only for stateless samplers), routers and batch policies declare —
+by module contract — that they are pure functions of their arguments.
+This module *verifies* those declarations:
+
+RPA301  a sampler's declared ``advances_state`` contradicts its traced
+        jaxpr: abstractly tracing ``sampler(xyz, n, state, shared)``
+        shows statically whether the returned state is the input state
+        variable (identity => does not advance) or a freshly computed
+        one (advances).  A mislabel corrupts the stream cache: a
+        stateful sampler replayed from cache would fork the LFSR walk.
+RPA302  re-tracing an entry produces a different canonical jaxpr:
+        tracing is deterministic for pure functions, so a mismatch
+        means host-side state (python RNG, counters, wall clock) leaks
+        into the trace.
+RPA303  a router or policy breaks the pure-function contract on a
+        concrete probe: a different pick for a permuted candidate list
+        (all builtins are order-invariant by construction), a
+        different answer on exact replay, or mutated constructor state
+        after ``decide``.
+
+Entry points: :func:`check_sampler_contracts`,
+:func:`check_grouper_contracts`, :func:`check_router_contracts`,
+:func:`check_policy_contracts`, and :func:`check_registry_contracts`
+(all of the above).
+"""
+from __future__ import annotations
+
+import warnings
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.findings import Finding, finding
+from repro.api import registry
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _trace_twice(fn, *args, where: str) -> tuple:
+    """(closed_jaxpr, findings): trace once for analysis, twice for the
+    RPA302 canonical-jaxpr comparison."""
+    try:
+        first = jax.make_jaxpr(fn)(*args)
+        second = jax.make_jaxpr(fn)(*args)
+    except Exception as e:  # noqa: BLE001 — surface as a finding
+        return None, [finding("RPA209", where,
+                              f"failed to trace: {type(e).__name__}: {e}")]
+    out: List[Finding] = []
+    if str(first.jaxpr) != str(second.jaxpr):
+        out.append(finding(
+            "RPA302", where,
+            "re-tracing produced a different jaxpr — host-side state "
+            "(python RNG / counters / wall clock) leaks into the trace, "
+            "violating the pure-trace contract"))
+    return first, out
+
+
+def check_sampler_contracts(names: Optional[Sequence[str]] = None
+                            ) -> List[Finding]:
+    """RPA301/302 over registered samplers (all when ``names`` is
+    None).  Samplers without a declared ``advances_state`` are skipped
+    here — the ``stream-contract`` spec pass (RPA015) owns that gap."""
+    out: List[Finding] = []
+    for name in (names if names is not None else registry.SAMPLERS.names()):
+        fn = registry.SAMPLERS.get(name)
+        declared = getattr(fn, "advances_state", None)
+        if declared is None:
+            continue
+        where = f"sampler:{name}"
+        xyz, state = _sds((2, 16, 3)), _sds((2,), jnp.uint32)
+        closed, findings_ = _trace_twice(
+            lambda x, st, _fn=fn: _fn(x, 4, st, False), xyz, state,
+            where=where)
+        out += findings_
+        if closed is None:
+            continue
+        # The state arg is the last flattened invar (a single array);
+        # the new state is the last flattened outvar.  Identity between
+        # them is exactly "does not advance".
+        state_in = closed.jaxpr.invars[-1]
+        state_out = closed.jaxpr.outvars[-1]
+        advances = state_out is not state_in
+        if bool(declared) != advances:
+            traced = "advances" if advances else "returns unchanged"
+            out.append(finding(
+                "RPA301", where,
+                f"sampler {name!r} declares advances_state="
+                f"{bool(declared)} but its traced jaxpr {traced} the "
+                f"LFSR state — a mislabel here forks the stream-cache "
+                f"replay from the cold LFSR walk"))
+    return out
+
+
+def check_grouper_contracts(names: Optional[Sequence[str]] = None
+                            ) -> List[Finding]:
+    """RPA302 over registered groupers, tracing both the whole entry
+    and (when exposed) its ``neighbor_index``/``group_with_idx``
+    split."""
+    out: List[Finding] = []
+    for name in (names if names is not None else registry.GROUPERS.names()):
+        fn = registry.GROUPERS.get(name)
+        where = f"grouper:{name}"
+        xyz, feats = _sds((2, 16, 3)), _sds((2, 16, 8))
+        idx = _sds((2, 4), jnp.int32)
+        _, findings_ = _trace_twice(
+            lambda x, f, i, _fn=fn: _fn(x, f, i, 4, None, "norm", True),
+            xyz, feats, idx, where=where)
+        out += findings_
+        nbr = getattr(fn, "neighbor_index", None)
+        if nbr is not None:
+            _, findings_ = _trace_twice(
+                lambda nx, x, _fn=nbr: _fn(nx, x, 4),
+                _sds((2, 4, 3)), xyz, where=f"{where}.neighbor_index")
+            out += findings_
+    return out
+
+
+def check_backend_contracts(names: Optional[Sequence[str]] = None
+                            ) -> List[Finding]:
+    """RPA302 over registered backends (fp32 frozen-layer probe)."""
+    out: List[Finding] = []
+    for name in (names if names is not None else registry.BACKENDS.names()):
+        fn = registry.BACKENDS.get(name)
+        params = {"w": _sds((8, 16)), "b": _sds((16,))}
+        _, findings_ = _trace_twice(
+            lambda p, x, _fn=fn: _fn(p, x, None, True),
+            params, _sds((4, 8)), where=f"backend:{name}")
+        out += findings_
+    return out
+
+
+def _probe_views():
+    from repro.serve.router import ReplicaView
+    return [ReplicaView(replica_id=i, tier="tier", depth=d, pending=p,
+                        max_batch=8)
+            for i, (d, p) in enumerate([(0, 5), (2, 2), (1, 7)])]
+
+
+def check_router_contracts(names: Optional[Sequence[str]] = None
+                           ) -> List[Finding]:
+    """RPA303 over registered routers: same pick under candidate-order
+    permutation, on exact replay, and with equal (fresh) state."""
+    from repro.serve.router import ROUTERS
+    out: List[Finding] = []
+    views = _probe_views()
+    for name in (names if names is not None else ROUTERS.names()):
+        fn = ROUTERS.get(name)
+        where = f"router:{name}"
+        try:
+            pick = fn("tenant-a", views, {})
+            replay = fn("tenant-a", views, {})
+            permuted = fn("tenant-a", list(reversed(views)), {})
+        except Exception as e:  # noqa: BLE001 — a crashing probe is the finding
+            out.append(finding("RPA303", where,
+                               f"router probe raised {type(e).__name__}: "
+                               f"{e}"))
+            continue
+        if pick != replay:
+            out.append(finding(
+                "RPA303", where,
+                f"router {name!r} returned different picks ({pick} vs "
+                f"{replay}) for identical (candidates, state) — it is "
+                f"not a pure function of its arguments"))
+        if pick != permuted:
+            out.append(finding(
+                "RPA303", where,
+                f"router {name!r} pick depends on candidate *order* "
+                f"({pick} vs {permuted} under permutation) — the fleet "
+                f"snapshots views in no guaranteed order"))
+    return out
+
+
+def check_policy_contracts(names: Optional[Sequence[str]] = None
+                           ) -> List[Finding]:
+    """RPA303 over registered batch policies: ``decide`` must be a pure
+    function of (depth, oldest_wait_ms, max_batch) and the constructor
+    state — same answers on replay, no state mutated by deciding."""
+    from repro.serve.policy import POLICIES, make_policy
+    out: List[Finding] = []
+    probes = [(0, 0.0), (3, 10.0), (8, 0.0), (5, 60.0), (12, 120.0)]
+    for name in (names if names is not None else POLICIES.names()):
+        where = f"policy:{name}"
+        try:
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore")
+                policy = make_policy(name, slo_ms=50.0, dispatch_ms=5.0)
+            before = repr(vars(policy))
+            first = [policy.decide(d, w, 8) for d, w in probes]
+            second = [policy.decide(d, w, 8) for d, w in probes]
+            after = repr(vars(policy))
+        except Exception as e:  # noqa: BLE001 — a crashing probe is the finding
+            out.append(finding("RPA303", where,
+                               f"policy probe raised {type(e).__name__}: "
+                               f"{e}"))
+            continue
+        if first != second:
+            out.append(finding(
+                "RPA303", where,
+                f"policy {name!r} gave different decide() answers on "
+                f"exact replay ({first} vs {second}) — not a pure "
+                f"function of its arguments"))
+        if before != after:
+            out.append(finding(
+                "RPA303", where,
+                f"policy {name!r} mutated its own state inside "
+                f"decide() ({before} -> {after}) — calibration must go "
+                f"through calibrate(), never a decide side effect"))
+    return out
+
+
+def check_registry_contracts() -> List[Finding]:
+    """Every contract check over every registered entry — the CLI's
+    contracts stage."""
+    return (check_sampler_contracts() + check_grouper_contracts()
+            + check_backend_contracts() + check_router_contracts()
+            + check_policy_contracts())

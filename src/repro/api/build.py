@@ -148,6 +148,12 @@ def build(spec: PipelineSpec, params: Dict, *, jit: bool = True,
         ``repro.serve.sharding.replica_submesh`` row.  Only valid for
         sharded specs.
     """
+    # Fail placement misconfigurations (RPA020: sharded dispatch without
+    # per-sample normalization) before the fuse/quantize work, not at
+    # shard_forward time.  Deferred: repro.analysis sits above spec/plan
+    # but below this module in the import graph.
+    from repro.analysis.passes import enforce_spec
+    enforce_spec(spec, scopes=("placement",))
     frozen, cfg, plan = _freeze(spec, params)
     return _place(spec, frozen, cfg, plan, jit=jit,
                   donate_lfsr=donate_lfsr, mesh=mesh)

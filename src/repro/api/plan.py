@@ -23,10 +23,12 @@ entry per stage) resolved here, per :class:`CBROp`, at lowering time:
 ``stage_precision=("int8", "int8", "int8", "fp32")`` quantizes stages
 1-3 and keeps stage 4 (and the embed/head, which follow the spec-level
 ``precision``) in fp32 — the paper's per-layer quantization exploration
-as a spec field.  Lowering *warnings* use the ``"repro stage-plan:"``
-prefix, which the repo's pytest config escalates to an error in-tree
-(mirroring the legacy-API gate); lowering *errors* (bad tuple length,
-unknown key, unfusable combination) raise ``ValueError``/``KeyError``.
+as a spec field.  Lowering diagnostics route through the
+``repro.analysis`` pass framework: soft misconfigurations warn with a
+stable ``RPAxxx``-coded message (escalated to an error in-tree by the
+pytest ``filterwarnings`` gate, keyed on the code prefix); hard errors
+(bad tuple length, unknown key, unfusable combination) raise
+``ValueError``/``KeyError`` with the same coded messages.
 
 Fused group->normalize->transfer
 --------------------------------
@@ -46,23 +48,13 @@ import functools
 import hashlib
 import itertools
 import json
-import warnings
 from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
 
 from repro.api import registry
 from repro.api.spec import N_STAGES as _N_STAGES
 from repro.core.quant import QuantConfig, is_quantizable_leaf_path
 
-#: Lowering-warning prefix — escalated to an error in-tree by the
-#: pyproject ``filterwarnings`` gate (external callers just get the
-#: warning), exactly like the ``"repro legacy API:"`` prefix.
-WARN_PREFIX = "repro stage-plan: "
-
 _PALLAS_BACKENDS = ("pallas_interpret", "pallas")
-
-
-def plan_warn(msg: str, stacklevel: int = 3) -> None:
-    warnings.warn(f"{WARN_PREFIX}{msg}", UserWarning, stacklevel=stacklevel)
 
 
 # ------------------------------------------------------------- op IR ----
@@ -365,19 +357,12 @@ def param_at(params: Dict, path: Tuple[Any, ...]):
 
 def resolve_stage_fields(spec) -> Tuple[Tuple[str, ...], Tuple[str, ...]]:
     """Resolve ``spec.stage_precision`` / ``stage_backend`` to full
-    4-tuples (inheriting the spec-level fields where unset), validating
-    values.  Spec ``__post_init__`` already checked shapes; this is the
-    lowering-time semantic resolution."""
+    4-tuples (inheriting the spec-level fields where unset).  Spec
+    ``__post_init__`` already checked shapes; semantic validation
+    (unknown keys, the int8-on-pallas fallback warning) lives in the
+    ``repro.analysis`` lowering passes :func:`lower` enforces."""
     prec = spec.stage_precision or (spec.precision,) * _N_STAGES
     back = spec.stage_backend or (spec.backend,) * _N_STAGES
-    for s, b in enumerate(back):
-        registry.BACKENDS.get(b)     # KeyError lists registered names
-        if prec[s] == "int8" and b in _PALLAS_BACKENDS:
-            plan_warn(
-                f"stage {s + 1} backend {b!r} cannot lower int8 export "
-                f"trees; the stage falls back to the reference int8 "
-                f"matmul (set the stage backend to 'ref' to silence)",
-                stacklevel=4)
     return tuple(prec), tuple(back)
 
 
@@ -444,51 +429,21 @@ def lower(spec, cfg) -> StagePlan:
     ``cfg`` supplies the topology (stage samples/dims, block counts);
     ``spec`` supplies the policy (per-stage precision/backend overrides,
     the fused group->transfer path).  Called once per pipeline by
-    ``repro.api.build``; raises on invalid overrides, warns (escalated
-    in-tree) on soft misconfigurations.
+    ``repro.api.build``.  Validation routes through the
+    ``repro.analysis`` lowering passes: error findings raise
+    ``ValueError``/``KeyError`` with their ``RPAxxx``-coded message,
+    warning findings (the int8-on-pallas fallback, RPA101) warn —
+    escalated in-tree by the pytest gate.
     """
+    # Deferred import: repro.analysis.passes imports this module.
+    from repro.analysis.passes import enforce_spec
+    enforce_spec(spec, scopes=("lowering",))
     stage_prec, stage_back = resolve_stage_fields(spec)
     fused_key = getattr(spec, "fused_group", "none") or "none"
-    fused_fn = None
-    if fused_key != "none":
-        fused_fn = registry.FUSED_OPS.get(fused_key)
-        if spec.grouper != "knn":
-            raise ValueError(
-                f"fused_group={fused_key!r} builds its neighborhoods "
-                f"with the knn distance core; grouper={spec.grouper!r} "
-                f"cannot lower fused (use grouper='knn' or "
-                f"fused_group='none')")
-        bad = [s + 1 for s in range(_N_STAGES) if stage_prec[s] == "int8"]
-        if bad:
-            raise ValueError(
-                f"fused_group={fused_key!r} requires fp32 transfer "
-                f"layers; stages {bad} resolve to int8 "
-                f"(stage_precision / precision)")
-        if not spec.fuse:
-            raise ValueError(
-                f"fused_group={fused_key!r} consumes BN-folded (w, b) "
-                f"transfer layers; set spec.fuse=True")
-
+    fused_fn = (registry.FUSED_OPS.get(fused_key)
+                if fused_key != "none" else None)
     head = getattr(spec, "head", "cls") or "cls"
     stream = bool(getattr(spec, "stream", False))
-    if stream:
-        if fused_key != "none":
-            raise ValueError(
-                f"stream=True cannot lower fused_group={fused_key!r}: "
-                f"the fused kernel has no cache-aware variant")
-        grouper_fn = registry.GROUPERS.get(spec.grouper)
-        if (getattr(grouper_fn, "neighbor_index", None) is None
-                or getattr(grouper_fn, "group_with_idx", None) is None):
-            raise ValueError(
-                f"stream=True needs a grouper exposing the "
-                f"neighbor_index/group_with_idx split (stream-cache "
-                f"contract); grouper {spec.grouper!r} does not")
-        sampler_fn = registry.SAMPLERS.get(spec.sampler)
-        if getattr(sampler_fn, "advances_state", None) is None:
-            raise ValueError(
-                f"stream=True needs a sampler declaring its "
-                f"advances_state stream-cache semantics; sampler "
-                f"{spec.sampler!r} does not")
 
     def make_cbr(path, stage, act) -> CBROp:
         precision = spec.precision if stage is None else stage_prec[stage]
@@ -586,22 +541,6 @@ DEFAULT_STAGE_PRECISIONS: Tuple[Tuple[str, ...], ...] = (
 )
 
 
-def _fused_valid(spec) -> bool:
-    """Static validity of a fused_group choice — mirrors the hard
-    errors :func:`lower` raises, so enumeration never yields a spec
-    that cannot lower."""
-    if spec.fused_group == "none":
-        return True
-    if getattr(spec, "stream", False):
-        return False
-    if spec.fused_group not in registry.FUSED_OPS:
-        return False
-    if spec.grouper != "knn" or not spec.fuse:
-        return False
-    prec = spec.stage_precision or (spec.precision,) * _N_STAGES
-    return all(p == "fp32" for p in prec)
-
-
 def enumerate_plan_space(base,
                          *,
                          stage_precisions: Iterable = DEFAULT_STAGE_PRECISIONS,
@@ -613,13 +552,17 @@ def enumerate_plan_space(base,
     """Enumerate the valid spec search space around ``base``.
 
     The cross product ``stage_precision`` x ``stage_backend`` x
-    ``fused_group`` x ``data_shards`` x sampler x grouper, with every
-    statically-invalid combination dropped (fused group->transfer with
-    an int8 stage or non-knn grouper; an int8 stage naming a pallas
-    backend, which would only warn-and-fall-back; unknown registry
-    keys).  Deterministic order — the cross product in argument order —
-    so the autotuner's candidate ranking is reproducible.
+    ``fused_group`` x ``data_shards`` x sampler x grouper, filtered by
+    the ``repro.analysis`` lowering passes: any candidate with an
+    error finding (fused group->transfer with an int8 stage or non-knn
+    grouper, unknown registry keys, a broken stream contract) *or* a
+    warning finding (an int8 stage naming a pallas backend only
+    warns-and-falls-back — that point duplicates the ref one) leaves
+    the space.  Deterministic order — the cross product in argument
+    order — so the autotuner's candidate ranking is reproducible.
     """
+    # Deferred import: repro.analysis.passes imports this module.
+    from repro.analysis.passes import analyze_spec
     samplers = tuple(samplers) if samplers is not None else (base.sampler,)
     groupers = tuple(groupers) if groupers is not None else (base.grouper,)
     out = []
@@ -628,20 +571,10 @@ def enumerate_plan_space(base,
             tuple(tuple(b) for b in stage_backends),
             tuple(fused_groups), tuple(data_shards),
             samplers, groupers):
-        if any(b not in registry.BACKENDS for b in sb):
-            continue
-        if sam not in registry.SAMPLERS or grp not in registry.GROUPERS:
-            continue
-        # An int8 stage on a pallas backend falls back to the reference
-        # int8 matmul with a warning (escalated in-tree) — that point
-        # duplicates the ref one, so the space drops it outright.
-        if any(p == "int8" and b in _PALLAS_BACKENDS
-               for p, b in zip(sp, sb)):
-            continue
         spec = base.replace(stage_precision=sp, stage_backend=sb,
                             fused_group=fg, data_shards=ds,
                             sampler=sam, grouper=grp)
-        if not _fused_valid(spec):
+        if analyze_spec(spec, scopes=("lowering",)):
             continue
         out.append(spec)
     return out

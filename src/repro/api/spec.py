@@ -21,8 +21,6 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional, Tuple
 
-from repro.api import registry
-
 PRECISIONS = ("fp32", "int8")
 AFFINE_MODES = ("affine", "norm", "center")
 HEADS = ("cls", "seg")
@@ -159,11 +157,13 @@ class PipelineSpec:
             raise ValueError(
                 f"stream_drift_threshold must be a finite float >= 0, "
                 f"got {thr!r}")
-        if self.stream and self.fused_group != "none":
-            raise ValueError(
-                "stream=True is incompatible with fused_group="
-                f"{self.fused_group!r}: the fused group->transfer kernel "
-                "has no cache-aware lowering (set fused_group='none')")
+        # Cross-field semantic checks (stream x fused_group, sharding x
+        # per_sample_norm, registry keys, ...) live in the
+        # repro.analysis passes — enforced by validate() / lower() /
+        # build(), reported by `python -m repro.analysis`.  Keeping
+        # them out of __post_init__ lets the autotuner *construct* any
+        # well-shaped point of the search space and prune it by
+        # analyzing, instead of crashing inside replace().
 
     def replace(self, **kw) -> "PipelineSpec":
         return dataclasses.replace(self, **kw)
@@ -201,17 +201,15 @@ class PipelineSpec:
         return self.replace(**kw)
 
     def validate(self) -> "PipelineSpec":
-        """Resolve every registry key (raises ``KeyError`` listing the
-        registered names on a typo); returns self for chaining."""
-        registry.resolve(self.sampler, self.grouper, self.backend)
-        for b in self.stage_backend or ():
-            registry.BACKENDS.get(b)
-        if self.fused_group != "none":
-            registry.FUSED_OPS.get(self.fused_group)
-        # Deferred import: the policy registry lives serve-side, above
-        # this package in the import graph.
-        from repro.serve.policy import POLICIES
-        POLICIES.get(self.policy)
+        """Run every ``repro.analysis`` pass scope over this spec and
+        enforce the findings: unknown registry keys raise ``KeyError``
+        listing the registered names (RPA001-005), broken lowering /
+        placement invariants raise ``ValueError`` with their ``RPAxxx``
+        code, soft misconfigurations warn (RPA101, escalated in-tree).
+        Returns self for chaining."""
+        # Deferred import: repro.analysis.passes imports repro.api.
+        from repro.analysis.passes import enforce_spec
+        enforce_spec(self)
         return self
 
     # ------------------------------------------- model-config bridge ----
@@ -407,14 +405,15 @@ class FleetSpec:
         return dataclasses.replace(self, **kw)
 
     def validate(self) -> "FleetSpec":
-        """Resolve every registry key the fleet names: each pool
-        pipeline's component keys, every tenant tier (checked at
-        construction), and the router (``repro.serve.router.ROUTERS``,
-        deferred import — serve sits above this package)."""
-        for p in self.pipelines:
-            p.validate()
-        from repro.serve.router import ROUTERS
-        ROUTERS.get(self.router)
+        """Run the fleet-level ``repro.analysis`` passes and enforce
+        the findings: every pool pipeline through every spec scope,
+        plus the router key (RPA006, ``KeyError`` listing the
+        registered routers).  Tenant-tier coverage is checked at
+        construction.  Returns self for chaining."""
+        # Deferred import: repro.analysis.passes imports repro.api.
+        from repro.analysis import enforce
+        from repro.analysis.passes import analyze_fleet_spec
+        enforce(analyze_fleet_spec(self))
         return self
 
 

@@ -12,9 +12,8 @@ after QAT: BN fusion -> int8 export -> (optional) Pallas-kernel backend.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Tuple
+from typing import Any, List, Tuple
 
-import jax
 
 from repro.core import fusion as F
 from repro.core import quant as Q

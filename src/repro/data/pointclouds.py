@@ -16,7 +16,6 @@ from typing import Iterator, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 CLASS_NAMES = ("sphere", "cube", "cylinder", "cone", "torus",
                "pyramid", "disk", "helix")

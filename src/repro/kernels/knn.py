@@ -25,7 +25,6 @@ def _knn_kernel(s_ref, p_ref, idx_ref, *, k: int, n_valid: int):
     cross = jax.lax.dot(s, p.T, preferred_element_type=jnp.float32)
     d = s2 - 2.0 * cross + p2                            # [TS, N] dist buffer
     big = jnp.finfo(jnp.float32).max
-    n = d.shape[1]
     col = jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
     # mask out padding points (wrapper pads N up to the lane multiple)
     d = jnp.where(col < n_valid, d, big)

@@ -6,12 +6,11 @@ sharding rules in ``repro.sharding.rules`` supply in/out shardings.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
-import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.configs.base import ShapeConfig, TrainConfig
 from repro.models.api import ModelAPI
 from repro.sharding import rules
 from repro.train import optimizer as opt_lib

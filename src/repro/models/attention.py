@@ -136,7 +136,6 @@ def attn_apply(p: Dict, cfg: ModelConfig, x: jnp.ndarray, *,
     """
     impl = impl or cfg.attn_impl
     h = n_heads or cfg.n_heads
-    hd = cfg.kv_head_dim
     quant = cfg.quant if cfg.quant.enabled else None
     b, t, _ = x.shape
     if cache is not None and cache_pos is not None:

@@ -16,7 +16,6 @@ conv+BN+ReLU path uses ``repro.kernels.fused_linear``.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Dict, Optional, Tuple
 
 import jax

@@ -12,7 +12,6 @@ internvl2-26b (vlm — patch-embedding stub feeds the same backbone).
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax

@@ -317,7 +317,6 @@ def _mlstm_final_state(p: Dict, cfg: ModelConfig, x: jnp.ndarray,
     """Exact end-of-sequence (S, n, conv) state via the chunk recurrence
     (no O(T^2) work)."""
     di, h, dk, dv = _dims(cfg)
-    t = x.shape[1]
     z, q, k, v, i_g, logf, conv_state = _mlstm_qkv(p, cfg, x, st["conv"])
     csum = jnp.cumsum(logf, axis=-1)
     decay_out = jnp.exp(csum[..., -1:] - csum)

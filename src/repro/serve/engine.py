@@ -14,7 +14,6 @@ from typing import Dict, List, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
 from repro.models.api import ModelAPI
 
 

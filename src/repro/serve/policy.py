@@ -26,8 +26,8 @@ script arrival traces and assert exact dispatch sizes.
 from __future__ import annotations
 
 import inspect
-import warnings
 
+from repro.analysis.findings import finding, warn_finding
 from repro.api.registry import Registry
 
 POLICIES = Registry("policy")
@@ -108,12 +108,12 @@ class DeadlineBatch(BatchPolicy):
     def __init__(self, slo_ms: float = 50.0, dispatch_ms: float = 0.0):
         super().__init__(slo_ms, dispatch_ms)
         if self.slo_ms > 0 and self.dispatch_ms >= self.slo_ms:
-            warnings.warn(
+            warn_finding(finding(
+                "RPA103", "policy:deadline",
                 f"DeadlineBatch: dispatch_ms={self.dispatch_ms:g} "
                 f"consumes the whole slo_ms={self.slo_ms:g} budget — "
                 f"the policy collapses into dispatch-on-arrival "
-                f"(every pump with a non-empty queue dispatches)",
-                stacklevel=3)
+                f"(every pump with a non-empty queue dispatches)"))
 
     def decide(self, depth: int, oldest_wait_ms: float,
                max_batch: int) -> int:
@@ -165,12 +165,12 @@ class CostModelBatch(BatchPolicy):
         # Until calibrated the flat dispatch_ms reservation applies, so
         # the same collapse DeadlineBatch warns about applies too.
         if self.slo_ms > 0 and self.dispatch_ms >= self.slo_ms:
-            warnings.warn(
+            warn_finding(finding(
+                "RPA103", "policy:cost",
                 f"CostModelBatch: uncalibrated dispatch_ms="
                 f"{self.dispatch_ms:g} consumes the whole slo_ms="
                 f"{self.slo_ms:g} budget — until calibrate() runs, the "
-                f"policy collapses into dispatch-on-arrival",
-                stacklevel=3)
+                f"policy collapses into dispatch-on-arrival"))
 
     def calibrate(self, stats, max_batch: int,
                   data_shards: int = 1) -> "CostModelBatch":
@@ -247,8 +247,9 @@ def make_policy(name_or_policy, slo_ms: float = 0.0,
     if accepts:
         return cls(slo_ms=slo_ms, dispatch_ms=dispatch_ms)
     if dispatch_ms:
-        warnings.warn(
+        warn_finding(finding(
+            "RPA102", f"policy:{name_or_policy}",
             f"policy {name_or_policy!r} does not accept dispatch_ms; "
             f"the spec's dispatch_ms={dispatch_ms:g} reservation is "
-            f"ignored", stacklevel=2)
+            f"ignored"), stacklevel=2)
     return cls(slo_ms=slo_ms)

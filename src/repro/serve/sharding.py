@@ -122,13 +122,11 @@ def shard_forward(fwd: Callable, spec,
       cache_out: ``fwd`` returns a trailing collected-cache pytree —
         likewise lane-split on the way out.
     """
-    if not spec.per_sample_norm:
-        raise ValueError(
-            "data_shards > 1 requires per-sample normalization "
-            "(spec.per_sample_norm, e.g. via spec.serving()): "
-            "batch-statistic normalization couples lanes across the "
-            "whole dispatch, so a device-split batch would silently "
-            "compute shard-local statistics and change results")
+    # One enforcement path with validate()/build(): the placement-scope
+    # analysis pass raises RPA020 ("data_shards > 1 requires per-sample
+    # normalization ...") for a sharded spec without per_sample_norm.
+    from repro.analysis.passes import enforce_spec
+    enforce_spec(spec, scopes=("placement",))
     if mesh is None:
         mesh = make_mesh(spec.data_shards)
     elif (tuple(mesh.axis_names) != ("data",)

@@ -148,10 +148,14 @@ class _CacheState:
 
 def _require_streaming(pipeline) -> None:
     if not getattr(pipeline, "streaming", False):
-        raise ValueError(
+        # Routed through the analyzer's finding path (RPA030) so the
+        # coded message matches `python -m repro.analysis` reports.
+        from repro.analysis import enforce, finding
+        enforce([finding(
+            "RPA030", "pipeline.streaming",
             "stream sessions need a streaming pipeline — build one from "
             "a spec with stream=True (e.g. spec.replace(stream=True, "
-            "stream_drift_threshold=0.05))")
+            "stream_drift_threshold=0.05))")])
 
 
 class StreamSession:

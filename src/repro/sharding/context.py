@@ -8,7 +8,6 @@ in which case manual paths fall back to the GSPMD implementation.
 from __future__ import annotations
 
 import contextlib
-from typing import Optional
 
 _MESH = None
 

@@ -11,7 +11,7 @@ Dims are matched from the END of the shape so stacked layer dims
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

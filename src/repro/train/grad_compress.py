@@ -16,7 +16,6 @@ axes stay automatic).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Tuple
 
 import jax

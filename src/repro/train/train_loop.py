@@ -89,7 +89,6 @@ def fit(api: ModelAPI, mesh, tc: TrainConfig,
     """Run (or resume) training. Returns final state + history."""
     hooks = hooks or {}
     train_step, init_opt = build_accumulating_step(api, mesh, tc)
-    p_sh = None
     start = ckpt_lib.latest_step(tc.checkpoint_dir)
     params = api.init(jax.random.PRNGKey(tc.seed))
     opt_state = init_opt(params)

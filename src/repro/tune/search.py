@@ -66,10 +66,32 @@ def anchor_spec(base):
                         fused_group="none", data_shards=1)
 
 
+def _static_prune(cand: Candidate) -> bool:
+    """Analyzer gate before estimation: a candidate whose spec carries
+    lowering-scope error findings (``repro.analysis``) is recorded as an
+    ``est_error`` row — coded, e.g. ``RPA011: ...`` — and never lowered.
+    This is what rejects statically-invalid points of an explicitly
+    passed ``space`` (``quick_space`` pre-filters through the same
+    passes via ``enumerate_plan_space``)."""
+    from repro.analysis import ERROR, analyze_spec
+    errs = [f for f in analyze_spec(cand.spec, scopes=("lowering",))
+            if f.severity == ERROR]
+    if errs:
+        cand.est_error = "; ".join(f.render() for f in errs)
+        return True
+    return False
+
+
 def _estimate(cand: Candidate, hw: roofline.HardwareModel) -> None:
+    import warnings
+
     try:
         cfg = cand.spec.to_model_config()
-        plan = stage_plan.lower(cand.spec, cfg)
+        with warnings.catch_warnings():
+            # Warning-severity findings (RPA101 fallback notes) are the
+            # tuner's normal search noise, not per-candidate output.
+            warnings.simplefilter("ignore")
+            plan = stage_plan.lower(cand.spec, cfg)
         cand.estimate = roofline.estimate_plan(
             plan, cfg, hw, data_shards=cand.spec.data_shards)
     except (ValueError, KeyError) as e:
@@ -178,7 +200,8 @@ def tune(base_spec, params=None, *, space: Optional[List] = None,
                                label=stage_plan.spec_label(spec)))
 
     for cand in cands:
-        _estimate(cand, hw)
+        if not _static_prune(cand):
+            _estimate(cand, hw)
 
     # Estimation seeds measurement: the anchor plus the top-K
     # estimated-fastest viable candidates, deterministically ordered

@@ -293,8 +293,10 @@ class TestLifecycle:
     def test_spec_validation(self):
         with pytest.raises(ValueError, match="stream_drift_threshold"):
             stream_spec(stream_drift_threshold=-0.5)
-        with pytest.raises(ValueError, match="fused_group"):
-            build_spec = stream_spec(fused_group="group_transfer")
+        # Cross-field checks live in the analyzer now: construction
+        # succeeds, validate()/lower() raise the coded RPA013 error.
+        build_spec = stream_spec(fused_group="grouped_transfer")
+        with pytest.raises(ValueError, match="RPA013.*fused_group"):
             build_spec.validate()
 
 

@@ -1,7 +1,6 @@
 """Sharding-rule unit tests (pspec derivation; divisibility fallbacks)."""
 import jax
 import jax.numpy as jnp
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_smoke_config

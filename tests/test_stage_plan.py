@@ -11,8 +11,8 @@ grouped-transfer path is opted into.
 
 Lowering: op-sequence shape, per-stage precision/backend override
 resolution (including the selective int8 export), invalid-override
-``ValueError``/``KeyError``s, and the ``"repro stage-plan:"`` warning
-prefix (escalated to an error in-tree by the pyproject gate).
+``ValueError``/``KeyError``s, and the ``RPA101``-coded fallback warning
+(escalated to an error in-tree by the pyproject gate).
 """
 import jax
 import jax.numpy as jnp
@@ -311,11 +311,11 @@ class TestInvalidOverrides:
     def test_int8_stage_with_pallas_backend_warns(self):
         """The soft misconfiguration: a pallas backend entry cannot
         lower int8 export trees, so the stage silently falls back —
-        lowering says so with the in-tree-escalated prefix."""
+        lowering says so with the in-tree-escalated RPA101 code."""
         spec = tiny_spec(precision="int8",
                          stage_backend=("ref", "ref", "pallas_interpret",
                                         "ref"))
-        with pytest.warns(UserWarning, match="repro stage-plan"):
+        with pytest.warns(UserWarning, match="RPA101"):
             SP.lower(spec, spec.to_model_config())
 
 

@@ -1,13 +1,11 @@
 """End-to-end system behaviour: the paper's full pipeline, condensed."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import get_smoke_config
 from repro.core import compress as CP
 from repro.core.quant import QuantConfig, quantize_tree
-from repro.data import pointclouds
 from repro.models import pointmlp as PM
 from repro.models.api import get_model
 from repro.serve.engine import Engine
@@ -58,9 +56,6 @@ def test_roofline_parser_on_real_hlo():
     """Collective parsing + roofline terms from an actually-compiled SPMD
     program (host mesh)."""
     from repro import roofline as RL
-    mesh = jax.make_mesh((1,), ("data",))
-    from jax.sharding import NamedSharding, PartitionSpec as P
-
     def f(x, w):
         return jax.lax.psum(x @ w, "data") if False else x @ w
 

@@ -1,7 +1,5 @@
 """Training infrastructure: checkpoint/restart, grad compression,
 optimizers, straggler monitor, data determinism."""
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np
