@@ -48,11 +48,14 @@ CODES = {
     # --- soft misconfigurations (escalated in-tree via the code
     #     prefix; plain warnings for external callers) ----------------
     "RPA101": (WARNING, "int8 stage on a pallas backend falls back to "
-                        "the reference int8 matmul"),
+                        "the reference int8 matmul (retired: int8 x "
+                        "pallas now lowers to the int8 Pallas matmul)"),
     "RPA102": (WARNING, "policy ignores the spec's dispatch_ms "
                         "reservation"),
     "RPA103": (WARNING, "deadline-style policy collapses into "
                         "dispatch-on-arrival"),
+    "RPA104": (WARNING, "stage arithmetic intensity far off its "
+                        "siblings (roofline anomaly)"),
     # --- jaxpr-level trace findings (repro.analysis.trace) -----------
     "RPA201": (ERROR, "float64 value in a traced stage jaxpr"),
     "RPA202": (ERROR, "silent int8->float upcast (dequant without the "

@@ -4,14 +4,19 @@ Each pass is a function ``(spec) -> List[Finding]`` registered with
 :func:`register_pass` under a name and a *scope*:
 
   ``lowering``   invariants ``lower(spec, cfg)`` needs (registry keys,
-                 fused-group preconditions, the stream-cache contract,
-                 the int8-on-pallas fallback warning).  Enforced by
-                 ``lower()`` and used by ``enumerate_plan_space`` /
-                 ``repro.tune`` to prune the search space.
+                 fused-group preconditions, the stream-cache contract).
+                 Enforced by ``lower()`` and used by
+                 ``enumerate_plan_space`` / ``repro.tune`` to prune the
+                 search space.
   ``serving``    invariants the async engines need (batch-policy key).
   ``placement``  invariants device placement needs (sharding requires
                  per-sample normalization).  Enforced by
                  ``repro.serve.sharding.shard_forward`` and ``build()``.
+  ``perf``       advisory roofline findings (a stage whose arithmetic
+                 intensity sits far off its siblings).  Reported by
+                 ``spec.validate()`` and the CLI; *not* enforced by
+                 ``lower()`` and excluded from the search-space pruning
+                 filter — a slow spec is still a valid spec.
 
 ``spec.validate()`` enforces every scope; :func:`analyze_spec` returns
 the findings without raising (the CLI / tests / tuner consume that).
@@ -36,7 +41,7 @@ from repro.api import registry
 from repro.api.plan import _PALLAS_BACKENDS
 from repro.api.spec import N_STAGES
 
-SCOPES = ("lowering", "serving", "placement")
+SCOPES = ("lowering", "serving", "placement", "perf")
 
 PASSES = registry.Registry("analysis-pass")
 
@@ -172,22 +177,11 @@ def stream_contract(spec) -> List[Finding]:
     return out
 
 
-@register_pass("int8-pallas-fallback", scope="lowering")
-def int8_pallas_fallback(spec) -> List[Finding]:
-    """RPA101 (warning): an int8 stage naming a pallas backend runs the
-    reference int8 matmul instead — legal, but the spec point
-    duplicates the ref one."""
-    prec = spec.stage_precision or (spec.precision,) * N_STAGES
-    back = spec.stage_backend or (spec.backend,) * N_STAGES
-    out: List[Finding] = []
-    for s, (p, b) in enumerate(zip(prec, back)):
-        if p == "int8" and b in _PALLAS_BACKENDS:
-            out.append(finding(
-                "RPA101", f"spec.stage_backend[{s}]",
-                f"stage {s + 1} backend {b!r} cannot lower int8 export "
-                f"trees; the stage falls back to the reference int8 "
-                f"matmul (set the stage backend to 'ref' to silence)"))
-    return out
+# RPA101 (int8-pallas-fallback) is retired: since the kernel-tuning
+# layer landed, an int8 stage on a pallas backend lowers to the int8
+# Pallas matmul (``plan._quant_for`` binds backend="int8_pallas") —
+# the spec point is a distinct, valid lowering, not a silent ref
+# fallback.  The code stays reserved in ``findings.CODES``.
 
 
 # ------------------------------------------------- serving passes -------
@@ -216,6 +210,72 @@ def sharding_per_sample_norm(spec) -> List[Finding]:
         "batch-statistic normalization couples lanes across the "
         "whole dispatch, so a device-split batch would silently "
         "compute shard-local statistics and change results")]
+
+
+# ------------------------------------------------- perf passes ----------
+
+#: Default anomaly threshold: a stage is flagged when its arithmetic
+#: intensity is more than this factor off the sibling median (in log
+#: space, i.e. either direction).  Calibrated so every shipped variant
+#: (elite/m2/lite, the compression ladder, their serving/int8
+#: derivatives — all sit within ~3.1x of their sibling median) analyzes
+#: clean while a single pathologically wide stage (e.g.
+#: stage_expansion=(1,1,1,64) — 16x+ off) trips it.
+INTENSITY_ANOMALY_FACTOR = 8.0
+
+
+def stage_intensities(spec) -> dict:
+    """Per-stage estimated arithmetic intensity (FLOPs per HBM byte),
+    aggregated over each stage's ops from the lowered plan's
+    :meth:`~repro.api.plan.StagePlan.cost_breakdown`.  Raises whatever
+    ``lower()`` raises for an unlowerable spec."""
+    from repro.api import plan as stage_plan
+    cfg = spec.to_model_config()
+    plan = stage_plan.lower(spec, cfg)
+    agg: dict = {}
+    for r in plan.cost_breakdown(cfg):
+        name = r["op"].split(".")[0]
+        if not name.startswith("stage"):
+            continue
+        fl, by = agg.get(name, (0, 0))
+        agg[name] = (fl + r["flops"],
+                     by + r["w_bytes"] + r["act_bytes"])
+    return {name: fl / max(by, 1) for name, (fl, by) in agg.items()}
+
+
+@register_pass("stage-intensity-anomaly", scope="perf")
+def stage_intensity_anomaly(spec) -> List[Finding]:
+    """RPA104 (warning): a stage whose estimated arithmetic intensity
+    falls far off its siblings' median — one stage of the pipeline is
+    disproportionately compute- or memory-bound, which usually means a
+    mis-sized expansion/depth knob rather than an intended design.
+    Advisory only (perf scope): never blocks lowering or the tuner."""
+    import math
+    try:
+        intens = stage_intensities(spec)
+    except Exception:
+        return []          # unlowerable specs belong to other scopes
+    if len(intens) < 3:
+        return []          # no meaningful sibling median
+    logs = sorted(math.log(max(v, 1e-12)) for v in intens.values())
+    n = len(logs)
+    med = (logs[n // 2] if n % 2
+           else 0.5 * (logs[n // 2 - 1] + logs[n // 2]))
+    cut = math.log(INTENSITY_ANOMALY_FACTOR)
+    out: List[Finding] = []
+    for name in sorted(intens):
+        dev = math.log(max(intens[name], 1e-12)) - med
+        if abs(dev) > cut:
+            direction = "compute" if dev > 0 else "memory"
+            out.append(finding(
+                "RPA104", f"plan.{name}",
+                f"{name} estimated arithmetic intensity "
+                f"{intens[name]:.2f} FLOP/byte is {math.exp(abs(dev)):.0f}x "
+                f"off the sibling median — disproportionately "
+                f"{direction}-bound (check the stage's expansion/depth "
+                f"knobs, or raise "
+                f"analysis.passes.INTENSITY_ANOMALY_FACTOR)"))
+    return out
 
 
 # ------------------------------------------------- entry points ---------

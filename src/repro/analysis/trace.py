@@ -265,8 +265,9 @@ def analyze_plan_trace(spec, cfg=None, plan=None) -> List[Finding]:
         cfg = spec.to_model_config()
     if plan is None:
         with warnings.catch_warnings():
-            # RPA101 is the lowering scope's report; re-warning it from
-            # the trace entry point would double-count.
+            # Warning findings are the lowering scope's report;
+            # re-warning them from the trace entry point would
+            # double-count.
             warnings.simplefilter("ignore")
             plan = plan_mod.lower(spec, cfg)
     in_shard = spec.data_shards > 1

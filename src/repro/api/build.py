@@ -357,7 +357,10 @@ class FrozenPipeline:
         from repro.core.quant import tree_size_bytes
         s = self.spec
         cfg = self.model_config
-        prec = (f"int8 (w{min(s.w_bits, 8)}/a{s.a_bits}, int8_ref matmul)"
+        from repro.api.plan import _PALLAS_BACKENDS
+        mm = ("int8_pallas" if s.backend in _PALLAS_BACKENDS
+              else "int8_ref")
+        prec = (f"int8 (w{min(s.w_bits, 8)}/a{s.a_bits}, {mm} matmul)"
                 if s.precision == "int8" else "fp32")
         lines = [
             f"FrozenPipeline({s.name})",

@@ -53,6 +53,7 @@ from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
 from repro.api import registry
 from repro.api.spec import N_STAGES as _N_STAGES
 from repro.core.quant import QuantConfig, is_quantizable_leaf_path
+from repro.kernels.tuning import DEFAULT_TUNING, KernelTuning
 
 _PALLAS_BACKENDS = ("pallas_interpret", "pallas")
 
@@ -202,6 +203,10 @@ class StagePlan:
     fused_group: str = "none"
     head: str = "cls"               # "cls" | "seg" (SegHeadOp lowering)
     stream: bool = False            # cache-aware mapping-op variants
+    #: Resolved per-kernel tile sizes (spec.kernel_tuning or the
+    #: defaults) — already bound onto the ops' fn callables; kept here
+    #: for introspection and cost modeling.
+    tuning: KernelTuning = DEFAULT_TUNING
 
     # ------------------------------------------------- introspection ----
 
@@ -250,11 +255,18 @@ class StagePlan:
         rows = []
         fused = {op.stage for op in self.ops
                  if isinstance(op, FusedGroupTransferOp)}
+        t = self.tuning
         for s in range(_N_STAGES):
             row = (f"stage {s + 1}: {self.stage_precision[s]}/"
                    f"{self.stage_backend[s]}")
+            if self.stage_backend[s] in _PALLAS_BACKENDS:
+                tm, tk, tn = (t.int8_matmul
+                              if self.stage_precision[s] == "int8"
+                              else t.fused_linear)
+                row += f" [tiles {tm}x{tk}x{tn}]"
             if s in fused:
-                row += f" [group->transfer fused: {self.fused_group}]"
+                row += (f" [group->transfer fused: {self.fused_group}, "
+                        f"tile_s={t.grouped_transfer}]")
             if self.stream:
                 row += " [stream-cached mapping]"
             rows.append(row)
@@ -359,17 +371,33 @@ def resolve_stage_fields(spec) -> Tuple[Tuple[str, ...], Tuple[str, ...]]:
     """Resolve ``spec.stage_precision`` / ``stage_backend`` to full
     4-tuples (inheriting the spec-level fields where unset).  Spec
     ``__post_init__`` already checked shapes; semantic validation
-    (unknown keys, the int8-on-pallas fallback warning) lives in the
+    (unknown keys, fused-path preconditions) lives in the
     ``repro.analysis`` lowering passes :func:`lower` enforces."""
     prec = spec.stage_precision or (spec.precision,) * _N_STAGES
     back = spec.stage_backend or (spec.backend,) * _N_STAGES
     return tuple(prec), tuple(back)
 
 
-def _quant_for(spec, precision: str) -> Optional[QuantConfig]:
-    """The deployment QuantConfig one CBR op runs under (None = fp32)."""
+def _quant_for(spec, precision: str,
+               backend: str = "ref") -> Optional[QuantConfig]:
+    """The deployment QuantConfig one CBR op runs under (None = fp32).
+
+    The int8 x pallas lowering rule lives here: an int8 op on a pallas
+    backend runs the int8 Pallas matmul kernel (int32 MXU accumulation,
+    epilogue dequant) with the spec's KernelTuning tiles bound — the
+    former RPA101 warn-and-fall-back to the reference int8 matmul is
+    retired.  ``pallas_interpret`` pins interpret mode (the CPU
+    correctness canary); ``pallas`` compiles.
+    """
     if precision != "int8":
         return None
+    if backend in _PALLAS_BACKENDS:
+        tuning = getattr(spec, "kernel_tuning", None) or DEFAULT_TUNING
+        return QuantConfig(w_bits=min(spec.w_bits, 8), a_bits=spec.a_bits,
+                           per_channel=spec.per_channel,
+                           symmetric=spec.symmetric, backend="int8_pallas",
+                           tiles=tuning.int8_matmul,
+                           interpret=(backend == "pallas_interpret"))
     return QuantConfig(w_bits=min(spec.w_bits, 8), a_bits=spec.a_bits,
                        per_channel=spec.per_channel,
                        symmetric=spec.symmetric, backend="int8_ref")
@@ -432,34 +460,50 @@ def lower(spec, cfg) -> StagePlan:
     ``repro.api.build``.  Validation routes through the
     ``repro.analysis`` lowering passes: error findings raise
     ``ValueError``/``KeyError`` with their ``RPAxxx``-coded message,
-    warning findings (the int8-on-pallas fallback, RPA101) warn —
-    escalated in-tree by the pytest gate.
+    warning findings warn — escalated in-tree by the pytest gate.
+
+    Kernel tuning: the spec's :class:`~repro.kernels.tuning.KernelTuning`
+    (or the defaults) is bound here, per op — pallas CBR ops get their
+    fused-matmul tiles partial-applied onto the backend callable, int8
+    pallas ops carry their tiles on the op's QuantConfig, and a fused
+    group->transfer op gets its sample-tile size — so tile choices are a
+    lowering axis, visible in ``describe()`` and the cost model, not
+    kwarg defaults buried in kernels/.
     """
     # Deferred import: repro.analysis.passes imports this module.
     from repro.analysis.passes import enforce_spec
     enforce_spec(spec, scopes=("lowering",))
     stage_prec, stage_back = resolve_stage_fields(spec)
+    tuning = getattr(spec, "kernel_tuning", None) or DEFAULT_TUNING
     fused_key = getattr(spec, "fused_group", "none") or "none"
     fused_fn = (registry.FUSED_OPS.get(fused_key)
                 if fused_key != "none" else None)
+    if fused_fn is not None:
+        fused_fn = functools.partial(fused_fn,
+                                     tile_s=tuning.grouped_transfer)
     head = getattr(spec, "head", "cls") or "cls"
     stream = bool(getattr(spec, "stream", False))
 
     def make_cbr(path, stage, act) -> CBROp:
         precision = spec.precision if stage is None else stage_prec[stage]
         backend = spec.backend if stage is None else stage_back[stage]
+        fn = registry.BACKENDS.get(backend)
+        if backend in _PALLAS_BACKENDS:
+            fn = functools.partial(fn, tiles=tuning.fused_linear)
         return CBROp(path=tuple(path), stage=stage, act=act,
                      precision=precision, backend=backend,
-                     quant=_quant_for(spec, precision),
-                     fn=registry.BACKENDS.get(backend))
+                     quant=_quant_for(spec, precision, backend),
+                     fn=fn)
 
-    ops = _build_ops(cfg, make_cbr, _quant_for(spec, spec.precision),
+    ops = _build_ops(cfg, make_cbr,
+                     _quant_for(spec, spec.precision, spec.backend),
                      fused_key=fused_key if fused_fn is not None else None,
                      fused_fn=fused_fn, head=head, stream=stream)
     return StagePlan(name=spec.name, ops=ops,
                      stage_precision=stage_prec, stage_backend=stage_back,
                      precision=spec.precision, backend=spec.backend,
-                     fused_group=fused_key, head=head, stream=stream)
+                     fused_group=fused_key, head=head, stream=stream,
+                     tuning=tuning)
 
 
 def lower_config(cfg, backend_fn: Callable,
@@ -522,13 +566,21 @@ def _inherited_stage_fields(spec) -> Tuple[Tuple[str, ...], Tuple[str, ...]]:
 
 def spec_label(spec) -> str:
     """Compact human-readable rendering of the *searched* axes of a spec
-    (the tuner's row name — stable across revisions for the CI diff)."""
+    (the tuner's row name — stable across revisions for the CI diff).
+    A non-default :class:`~repro.kernels.tuning.KernelTuning` appends a
+    ``/kt=`` token so tile-only twins keep distinct artifact rows."""
     prec, back = _inherited_stage_fields(spec)
-    return (f"{spec.sampler}/{spec.grouper}"
-            f"/prec={'.'.join(prec)}+{spec.precision}"
-            f"/be={back[0] if len(set(back)) == 1 else '.'.join(back)}"
-            f"/fg={getattr(spec, 'fused_group', 'none')}"
-            f"/ds={spec.data_shards}")
+    label = (f"{spec.sampler}/{spec.grouper}"
+             f"/prec={'.'.join(prec)}+{spec.precision}"
+             f"/be={back[0] if len(set(back)) == 1 else '.'.join(back)}"
+             f"/fg={getattr(spec, 'fused_group', 'none')}"
+             f"/ds={spec.data_shards}")
+    kt = getattr(spec, "kernel_tuning", None)
+    if kt is not None and kt != DEFAULT_TUNING:
+        tm, tk, tn = kt.fused_linear
+        label += (f"/kt={tm}x{tk}x{tn}.gt{kt.grouped_transfer}"
+                  f".f{kt.fps}.k{kt.knn}")
+    return label
 
 
 #: Default per-stage precision ladder searched by the autotuner: the
@@ -548,32 +600,41 @@ def enumerate_plan_space(base,
                          fused_groups: Iterable = ("none",),
                          data_shards: Iterable = (1,),
                          samplers: Optional[Iterable] = None,
-                         groupers: Optional[Iterable] = None) -> List:
+                         groupers: Optional[Iterable] = None,
+                         kernel_tunings: Iterable = (None,)) -> List:
     """Enumerate the valid spec search space around ``base``.
 
     The cross product ``stage_precision`` x ``stage_backend`` x
-    ``fused_group`` x ``data_shards`` x sampler x grouper, filtered by
-    the ``repro.analysis`` lowering passes: any candidate with an
-    error finding (fused group->transfer with an int8 stage or non-knn
-    grouper, unknown registry keys, a broken stream contract) *or* a
-    warning finding (an int8 stage naming a pallas backend only
-    warns-and-falls-back — that point duplicates the ref one) leaves
-    the space.  Deterministic order — the cross product in argument
-    order — so the autotuner's candidate ranking is reproducible.
+    ``fused_group`` x ``data_shards`` x sampler x grouper x
+    ``kernel_tuning``, filtered by the ``repro.analysis`` lowering
+    passes: any candidate with an error finding (fused group->transfer
+    with an int8 stage or non-knn grouper, unknown registry keys, a
+    broken stream contract) *or* a warning finding leaves the space.
+    int8 stages on pallas backends are *valid* points (they lower to
+    the int8 Pallas matmul — the former RPA101 fallback warning is
+    retired).  ``kernel_tunings`` entries are
+    :class:`~repro.kernels.tuning.KernelTuning` instances (``None``
+    inherits ``base.kernel_tuning``) — ``repro.tune.kernels`` feeds
+    measured best-tile tables in here so the roofline search ranks tile
+    candidates alongside the other axes.  Deterministic order — the
+    cross product in argument order — so the autotuner's candidate
+    ranking is reproducible.
     """
     # Deferred import: repro.analysis.passes imports this module.
     from repro.analysis.passes import analyze_spec
     samplers = tuple(samplers) if samplers is not None else (base.sampler,)
     groupers = tuple(groupers) if groupers is not None else (base.grouper,)
     out = []
-    for sp, sb, fg, ds, sam, grp in itertools.product(
+    for sp, sb, fg, ds, sam, grp, kt in itertools.product(
             tuple(tuple(p) for p in stage_precisions),
             tuple(tuple(b) for b in stage_backends),
             tuple(fused_groups), tuple(data_shards),
-            samplers, groupers):
+            samplers, groupers, tuple(kernel_tunings)):
         spec = base.replace(stage_precision=sp, stage_backend=sb,
                             fused_group=fg, data_shards=ds,
                             sampler=sam, grouper=grp)
+        if kt is not None:
+            spec = spec.replace(kernel_tuning=kt)
         if analyze_spec(spec, scopes=("lowering",)):
             continue
         out.append(spec)

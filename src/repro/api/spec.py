@@ -21,6 +21,8 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional, Tuple
 
+from repro.kernels.tuning import KernelTuning
+
 PRECISIONS = ("fp32", "int8")
 AFFINE_MODES = ("affine", "norm", "center")
 HEADS = ("cls", "seg")
@@ -98,6 +100,11 @@ class PipelineSpec:
     # key frame, same units as the cloud coordinates). ----
     stream: bool = False
     stream_drift_threshold: float = 0.0
+    # ---- kernel tuning: per-kernel Pallas tile sizes
+    # (``repro.kernels.tuning.KernelTuning``), bound per op at lowering
+    # time; None = the kernels' defaults.  ``repro.tune.kernels`` picks
+    # these by timed sweeps at the plan's actual shapes. ----
+    kernel_tuning: Optional[KernelTuning] = None
     # ---- batch semantics ----
     shared_urs: bool = False
     per_sample_norm: bool = False
@@ -146,6 +153,12 @@ class PipelineSpec:
         if not isinstance(self.fused_group, str):
             raise ValueError(f"fused_group must be a FUSED_OPS registry "
                              f"key or 'none', got {self.fused_group!r}")
+        if (self.kernel_tuning is not None
+                and not isinstance(self.kernel_tuning, KernelTuning)):
+            raise ValueError(
+                f"kernel_tuning must be a repro.kernels.tuning."
+                f"KernelTuning (or None for defaults), "
+                f"got {self.kernel_tuning!r}")
         if self.head not in HEADS:
             raise ValueError(f"head must be one of {HEADS}, "
                              f"got {self.head!r}")
@@ -205,7 +218,7 @@ class PipelineSpec:
         enforce the findings: unknown registry keys raise ``KeyError``
         listing the registered names (RPA001-005), broken lowering /
         placement invariants raise ``ValueError`` with their ``RPAxxx``
-        code, soft misconfigurations warn (RPA101, escalated in-tree).
+        code, soft misconfigurations warn (RPA1xx, escalated in-tree).
         Returns self for chaining."""
         # Deferred import: repro.analysis.passes imports repro.api.
         from repro.analysis.passes import enforce_spec

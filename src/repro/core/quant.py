@@ -27,6 +27,11 @@ class QuantConfig:
     symmetric: bool = True
     # matmul implementation: fake (QAT), int8_ref (jnp int8), int8_pallas
     backend: str = "fake"
+    # int8_pallas only: (tm, tk, tn) tile sizes and interpret-mode flag,
+    # bound at lowering time from the spec's KernelTuning / stage backend
+    # (None = kernel defaults / platform-resolved interpret).
+    tiles: Optional[Tuple[int, int, int]] = None
+    interpret: Optional[bool] = None
 
     @property
     def enabled(self) -> bool:

@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.tuning import resolve_interpret
+
 _NEG = -1e30
 
 
@@ -77,8 +79,9 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                            causal: bool = True, window: int = 0,
                            tq: int = 128, tk: int = 128,
-                           interpret: bool = True) -> jnp.ndarray:
+                           interpret=None) -> jnp.ndarray:
     """q [B,H,Tq,D], k/v [B,Hkv,Tk,D] -> [B,H,Tq,D] (GQA if Hkv < H)."""
+    interpret = resolve_interpret(interpret)
     b, h, t_q, d = q.shape
     hkv, t_k = k.shape[1], k.shape[2]
     rep = h // hkv

@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.tuning import resolve_interpret
+
 
 def _fps_update_kernel(p_ref, last_ref, d_ref, o_ref):
     p = p_ref[:].astype(jnp.float32)              # [C, TN]
@@ -26,9 +28,11 @@ def _fps_update_kernel(p_ref, last_ref, d_ref, o_ref):
 @functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
 def fps_update_pallas(points_t: jnp.ndarray, last: jnp.ndarray,
                       dists: jnp.ndarray, tile_n: int = 512,
-                      interpret: bool = True) -> jnp.ndarray:
+                      interpret=None) -> jnp.ndarray:
     """points_t [C, N] (transposed layout), last [C], dists [1, N] ->
-    new running-min dists [1, N]."""
+    new running-min dists [1, N].  ``interpret=None`` resolves from the
+    platform (compiled on TPU, interpreter elsewhere)."""
+    interpret = resolve_interpret(interpret)
     c, n = points_t.shape
     n_pad = -n % tile_n
     pp = jnp.pad(points_t, ((0, 0), (0, n_pad)))
@@ -50,8 +54,9 @@ def fps_update_pallas(points_t: jnp.ndarray, last: jnp.ndarray,
 
 
 def fps_pallas(points: jnp.ndarray, n_samples: int,
-               interpret: bool = True) -> jnp.ndarray:
+               interpret=None, tile_n: int = 512) -> jnp.ndarray:
     """Full FPS using the Pallas distance-update step. [N, C] -> [S]."""
+    interpret = resolve_interpret(interpret)
     n = points.shape[0]
     pt = points.T                                  # [C, N] TPU-native
     dists0 = jnp.full((1, n), jnp.inf, jnp.float32)
@@ -60,7 +65,8 @@ def fps_pallas(points: jnp.ndarray, n_samples: int,
     def body(i, carry):
         dists, idxs = carry
         last = points[idxs[i - 1]]
-        dists = fps_update_pallas(pt, last, dists, interpret=interpret)
+        dists = fps_update_pallas(pt, last, dists, tile_n=tile_n,
+                                  interpret=interpret)
         nxt = jnp.argmax(dists[0]).astype(jnp.int32)
         return dists, idxs.at[i].set(nxt)
 

@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.tuning import resolve_interpret
+
 
 def _fused_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, k_tiles: int,
                   activation: str):
@@ -40,9 +42,10 @@ def _fused_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, k_tiles: int,
 def fused_linear_pallas(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
                         activation: str = "relu", tm: int = 128,
                         tk: int = 128, tn: int = 128,
-                        interpret: bool = True) -> jnp.ndarray:
+                        interpret=None) -> jnp.ndarray:
     """act(x @ w + b): [M,K] @ [K,N] + [N] in one pass."""
     assert activation in ("relu", "gelu", "none")
+    interpret = resolve_interpret(interpret)
     m, k = x.shape
     n = w.shape[1]
     xp = jnp.pad(x, ((0, -m % tm), (0, -k % tk)))

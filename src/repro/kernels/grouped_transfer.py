@@ -17,11 +17,15 @@ all in one VMEM round-trip — the grouped tensor never round-trips
 through HBM between normalize and transfer.
 
 Two-pass structure: sigma is a *global* reduction over the cloud's
-local offsets (PointMLP's definition), so a cheap stats pass computes
-it first (reading ``[S, k, C]``, writing one scalar per cloud); the
-fused kernel then consumes it as a scalar operand.  On a real TPU the
-stats pass is the natural candidate for a second grid dimension with a
-scratch accumulator — tracked in ROADMAP (interpret mode on CPU is the
+local offsets (PointMLP's definition).  Under per-cloud (serving)
+semantics the stats pass lives *inside* the kernel as a second grid
+dimension: grid ``(2, s_tiles)`` with the pass index outermost, pass 0
+accumulates masked ``sum(off²)`` into a ``[1,1]`` VMEM scratch that
+persists across the sequential grid, pass 1 finalizes sigma from the
+scratch and runs gather→normalize→affine→matmul — the offsets never
+leave VMEM between the reduction and the transfer.  Batch-global sigma
+(training semantics) still reduces across clouds outside the kernel
+and is passed in as a scalar operand (interpret mode on CPU is the
 correctness canary, exactly like ``fused_linear``).
 
 Exposed to pipelines as the ``grouped_transfer`` entry of
@@ -36,8 +40,10 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import knn as knn_core
+from repro.kernels.tuning import resolve_interpret
 
 _EPS = 1e-5
 
@@ -65,33 +71,109 @@ def _grouped_transfer_kernel(feats_ref, nidx_ref, cen_ref, sig_ref,
     o_ref[:] = y.reshape(ts, k, w_ref.shape[1]).astype(o_ref.dtype)
 
 
+def _grouped_transfer_stats_kernel(feats_ref, nidx_ref, cen_ref, alpha_ref,
+                                   beta_ref, w_ref, b_ref, o_ref, acc_ref, *,
+                                   k: int, affine: bool, act: bool,
+                                   s_valid: int, tile_s: int, count: float):
+    """Fused-stats variant: grid (2, s_tiles), pass index outermost.
+
+    Pass 0 folds each tile's masked ``sum(off²)`` into the ``[1,1]``
+    VMEM scratch (which persists across the sequential grid); pass 1
+    finalizes ``sigma = sqrt(acc/count + eps)`` and runs the same
+    normalize→affine→concat→matmul epilogue as the precomputed-sigma
+    kernel.  Padding rows are masked out of the reduction only — the
+    compute pass's padded rows are sliced away by the wrapper.
+    """
+    p_ax = pl.program_id(0)
+    i = pl.program_id(1)
+    feats = feats_ref[:]                               # [N, C]
+    nidx = nidx_ref[:]                                 # [TS, k]
+    cen = cen_ref[:]                                   # [TS, C]
+    ts, c = cen.shape
+    nbr = jnp.take(feats, nidx.reshape(-1), axis=0).reshape(ts, k, c)
+    off = nbr - cen[:, None, :]
+
+    @pl.when(p_ax == 0)
+    def _stats():
+        @pl.when(i == 0)
+        def _init():
+            acc_ref[:] = jnp.zeros_like(acc_ref)
+
+        row = jax.lax.broadcasted_iota(jnp.int32, (ts, 1, 1), 0)
+        valid = (row + i * tile_s) < s_valid
+        sq = jnp.where(valid, off * off, 0.0)
+        acc_ref[:] = acc_ref[:] + jnp.sum(sq)
+
+    @pl.when(p_ax == 1)
+    def _compute():
+        sigma = jnp.sqrt(acc_ref[0, 0] / count + _EPS)
+        offn = off / (sigma + _EPS)
+        if affine:
+            offn = offn * alpha_ref[0] + beta_ref[0]
+        cen_b = jnp.broadcast_to(cen[:, None, :], (ts, k, c))
+        x = jnp.concatenate([offn, cen_b], axis=-1).reshape(ts * k, 2 * c)
+        y = jax.lax.dot(x, w_ref[:], preferred_element_type=jnp.float32)
+        y = y + b_ref[0].astype(jnp.float32)
+        if act:
+            y = jnp.maximum(y, 0.0)
+        o_ref[:] = y.reshape(ts, k, w_ref.shape[1]).astype(o_ref.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("k", "normalize", "affine",
                                              "act", "tile_s", "interpret"))
 def grouped_transfer_pallas(feats: jnp.ndarray, nidx: jnp.ndarray,
-                            centers: jnp.ndarray, sigma: jnp.ndarray,
-                            alpha: jnp.ndarray, beta: jnp.ndarray,
-                            w: jnp.ndarray, b: jnp.ndarray, *, k: int,
+                            centers: jnp.ndarray, sigma, alpha: jnp.ndarray,
+                            beta: jnp.ndarray, w: jnp.ndarray,
+                            b: jnp.ndarray, *, k: int,
                             normalize: bool = True, affine: bool = True,
                             act: bool = True, tile_s: int = 64,
-                            interpret: bool = True) -> jnp.ndarray:
+                            interpret=None) -> jnp.ndarray:
     """One cloud: feats [N,C], nidx [S,k], centers [S,C] -> [S,k,C_out].
 
-    ``sigma`` is the precomputed geometric-affine scale (scalar as
-    [1,1]); ``alpha``/``beta`` are [1,C] (pass ones/zeros for the
-    pruned ``norm`` mode — the multiply is skipped when
-    ``affine=False``).
+    ``sigma`` is the geometric-affine scale (scalar as [1,1]) — or
+    ``None`` with ``normalize=True`` to compute it *inside* the kernel
+    as a stats pass on a second grid dimension (per-cloud semantics);
+    ``alpha``/``beta`` are [1,C] (pass ones/zeros for the pruned
+    ``norm`` mode — the multiply is skipped when ``affine=False``).
+    ``interpret=None`` resolves from the platform.
     """
+    interpret = resolve_interpret(interpret)
     s = nidx.shape[0]
     c = feats.shape[1]
     c_out = w.shape[1]
     s_pad = -s % tile_s
     nidx_p = jnp.pad(nidx, ((0, s_pad), (0, 0)))
     cen_p = jnp.pad(centers, ((0, s_pad), (0, 0)))
-    grid = ((s + s_pad) // tile_s,)
+    s_tiles = (s + s_pad) // tile_s
+    if normalize and sigma is None:
+        out = pl.pallas_call(
+            functools.partial(_grouped_transfer_stats_kernel, k=k,
+                              affine=affine, act=act, s_valid=s,
+                              tile_s=tile_s, count=float(s * k * c)),
+            grid=(2, s_tiles),
+            in_specs=[
+                pl.BlockSpec(feats.shape, lambda p, i: (0, 0)),
+                pl.BlockSpec((tile_s, k), lambda p, i: (i, 0)),
+                pl.BlockSpec((tile_s, c), lambda p, i: (i, 0)),
+                pl.BlockSpec((1, c), lambda p, i: (0, 0)),
+                pl.BlockSpec((1, c), lambda p, i: (0, 0)),
+                pl.BlockSpec(w.shape, lambda p, i: (0, 0)),
+                pl.BlockSpec((1, c_out), lambda p, i: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((tile_s, k, c_out),
+                                   lambda p, i: (i, 0, 0)),
+            out_shape=jax.ShapeDtypeStruct((s + s_pad, k, c_out),
+                                           feats.dtype),
+            scratch_shapes=[pltpu.VMEM((1, 1), jnp.float32)],
+            interpret=interpret,
+        )(feats, nidx_p, cen_p, alpha, beta, w, b)
+        return out[:s]
+    if sigma is None:
+        sigma = jnp.ones((1, 1), feats.dtype)
     out = pl.pallas_call(
         functools.partial(_grouped_transfer_kernel, k=k,
                           normalize=normalize, affine=affine, act=act),
-        grid=grid,
+        grid=(s_tiles,),
         in_specs=[
             pl.BlockSpec(feats.shape, lambda i: (0, 0)),
             pl.BlockSpec((tile_s, k), lambda i: (i, 0)),
@@ -114,7 +196,8 @@ def fused_group_transfer(xyz: jnp.ndarray, feats: jnp.ndarray,
                          sample_idx: jnp.ndarray, k: int,
                          affine_params: Optional[dict], mode: str,
                          per_sample_norm: bool, p: dict, *,
-                         act: bool = True, interpret: bool = True):
+                         act: bool = True, interpret=None,
+                         tile_s: int = 64):
     """The FUSED_OPS-contract wrapper: a whole GroupOp + transfer-CBROp
     pair as (stats pass + fused kernel), batched over clouds.
 
@@ -152,27 +235,33 @@ def fused_group_transfer(xyz: jnp.ndarray, feats: jnp.ndarray,
         alpha = jnp.ones((1, c), feats.dtype)
         beta = jnp.zeros((1, c), feats.dtype)
 
-    # Stats pass: sigma exactly as repro.core.knn.normalize_group
-    # computes it — std of the local offsets, per cloud under
-    # per-sample (serving) semantics, over the whole batch otherwise.
-    if normalize:
+    # Stats placement: per-cloud sigma (serving semantics) is a second
+    # grid dimension inside the kernel — no outside [B,S,k,C] gather at
+    # all.  Batch-global sigma (training semantics) reduces across
+    # clouds, which a per-cloud kernel can't see, so it stays outside
+    # exactly as repro.core.knn.normalize_group computes it.
+    if normalize and not per_sample_norm:
         gathered = knn_core.gather_neighbors(feats, nbr_idx)
         off = gathered - center_f[:, :, None, :]
-        red = (1, 2, 3) if per_sample_norm else None
-        sigma = jnp.sqrt(jnp.mean(off * off, axis=red, keepdims=False)
-                         + _EPS)
-        sigma = (sigma.reshape(-1, 1, 1) if per_sample_norm
-                 else jnp.broadcast_to(sigma, (feats.shape[0],)
-                                       ).reshape(-1, 1, 1))
-    else:
-        sigma = jnp.ones((feats.shape[0], 1, 1), feats.dtype)
+        sigma = jnp.sqrt(jnp.mean(off * off) + _EPS)
+        sigma = jnp.broadcast_to(sigma, (feats.shape[0],)).reshape(-1, 1, 1)
+
+        def one_cloud(args):
+            f, ni, cen, sig = args
+            return grouped_transfer_pallas(
+                f, ni, cen, sig, alpha, beta, w, bias[None, :], k=k,
+                normalize=normalize, affine=affine, act=act,
+                tile_s=tile_s, interpret=interpret)
+
+        out = jax.lax.map(one_cloud, (feats, nbr_idx, center_f, sigma))
+        return new_xyz, center_f, out
 
     def one_cloud(args):
-        f, ni, cen, sig = args
+        f, ni, cen = args
         return grouped_transfer_pallas(
-            f, ni, cen, sig, alpha, beta, w, bias[None, :], k=k,
+            f, ni, cen, None, alpha, beta, w, bias[None, :], k=k,
             normalize=normalize, affine=affine, act=act,
-            interpret=interpret)
+            tile_s=tile_s, interpret=interpret)
 
-    out = jax.lax.map(one_cloud, (feats, nbr_idx, center_f, sigma))
+    out = jax.lax.map(one_cloud, (feats, nbr_idx, center_f))
     return new_xyz, center_f, out

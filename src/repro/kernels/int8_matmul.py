@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.tuning import resolve_interpret
+
 
 def _int8_kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, k_tiles: int):
     @pl.when(pl.program_id(2) == 0)
@@ -46,9 +48,10 @@ def _pad2(x, tm, tn):
 def int8_matmul_pallas(x_q: jnp.ndarray, w_q: jnp.ndarray,
                        scale: jnp.ndarray, tm: int = 128, tk: int = 128,
                        tn: int = 128, out_dtype=jnp.float32,
-                       interpret: bool = True) -> jnp.ndarray:
+                       interpret=None) -> jnp.ndarray:
     """x_q int8 [M,K] @ w_q int8 [K,N] -> out_dtype [M,N], scaled by
     ``scale`` (combined act*weight scale, shape [1,N] or [1,1])."""
+    interpret = resolve_interpret(interpret)
     m, k = x_q.shape
     n = w_q.shape[1]
     xp, wp = _pad2(x_q, tm, tk), _pad2(w_q, tk, tn)
@@ -88,8 +91,9 @@ def _w8_kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, k_tiles: int):
 @functools.partial(jax.jit, static_argnames=("tm", "tk", "tn", "interpret"))
 def w8_matmul_pallas(x: jnp.ndarray, w_q: jnp.ndarray, w_scale: jnp.ndarray,
                      tm: int = 128, tk: int = 128, tn: int = 128,
-                     interpret: bool = True) -> jnp.ndarray:
+                     interpret=None) -> jnp.ndarray:
     """x [M,K] (bf16/f32) @ int8 w_q [K,N] * w_scale [1,N] -> x.dtype."""
+    interpret = resolve_interpret(interpret)
     m, k = x.shape
     n = w_q.shape[1]
     xp, wp = _pad2(x, tm, tk), _pad2(w_q, tk, tn)

@@ -16,6 +16,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.tuning import resolve_interpret
+
 
 def _knn_kernel(s_ref, p_ref, idx_ref, *, k: int, n_valid: int):
     s = s_ref[:].astype(jnp.float32)                     # [TS, C]
@@ -45,8 +47,13 @@ def _knn_kernel(s_ref, p_ref, idx_ref, *, k: int, n_valid: int):
 @functools.partial(jax.jit,
                    static_argnames=("k", "tile_s", "interpret"))
 def knn_pallas(samples: jnp.ndarray, points: jnp.ndarray, k: int,
-               tile_s: int = 128, interpret: bool = True) -> jnp.ndarray:
-    """[S, C], [N, C] -> [S, k] int32 (ascending distance order)."""
+               tile_s: int = 128, interpret=None) -> jnp.ndarray:
+    """[S, C], [N, C] -> [S, k] int32 (ascending distance order).
+
+    ``interpret=None`` resolves from the platform (compiled on TPU,
+    interpreter elsewhere); the lowering layer passes an explicit bool.
+    """
+    interpret = resolve_interpret(interpret)
     s, c = samples.shape
     n = points.shape[0]
     s_pad = -s % tile_s

@@ -40,15 +40,20 @@ def fps_update(points_t, last, dists):
 
 
 def int8_matmul(x: jnp.ndarray, w_q: jnp.ndarray, w_scale: jnp.ndarray,
-                a_bits: int = 8) -> jnp.ndarray:
+                a_bits: int = 8, tiles=None, interpret=None) -> jnp.ndarray:
     """Quantize activations on the fly (A8) and run the int8 kernel.
-    Combined dequant scale = act_scale * weight_scale."""
+    Combined dequant scale = act_scale * weight_scale.  ``tiles`` is an
+    optional (tm, tk, tn) override from a KernelTuning; ``interpret``
+    defaults to the platform resolution."""
     a_scale = compute_scale(x, a_bits)
     x_q = quantize(x, a_scale, a_bits).astype(jnp.int8)
     scale = (a_scale * w_scale.reshape(1, -1)).astype(jnp.float32)
     lead = x.shape[:-1]
+    tm, tk, tn = tiles if tiles is not None else (128, 128, 128)
     y = int8_matmul_pallas(x_q.reshape(-1, x.shape[-1]), w_q, scale,
-                           out_dtype=jnp.float32, interpret=_interp())
+                           tm=tm, tk=tk, tn=tn, out_dtype=jnp.float32,
+                           interpret=(_interp() if interpret is None
+                                      else interpret))
     return y.reshape(*lead, w_q.shape[1]).astype(x.dtype)
 
 

@@ -1,0 +1,258 @@
+"""Per-kernel tile micro-autotuner feeding the plan search.
+
+The plan-level tuner (:mod:`repro.tune.search`) ranks whole specs; this
+module ranks the *tile sizes inside* one spec's kernels: timed sweeps
+over a small per-kernel tile grid at the plan's actual shapes, cached
+per ``(kernel, shape, dtype, platform)`` so a search that lowers the
+same stage geometry twice pays for one sweep.
+
+    from repro.tune.kernels import plan_tuning, tuning_candidates
+
+    kt = plan_tuning(spec)                  # measured best tiles
+    pipe = build(spec.replace(kernel_tuning=kt), params)
+
+    # or let the roofline search rank a static candidate set:
+    space = enumerate_plan_space(base, kernel_tunings=tuning_candidates())
+
+On this CPU container the kernels run in interpret mode, so the
+absolute microseconds are *not* TPU numbers — but the relative ranking
+still punishes tiles that pad a narrow layer up to a huge grid, which
+is the same signal :func:`repro.roofline.estimate_plan` models
+statically as ``_tile_waste``.  On a real TPU the identical sweep times
+compiled Mosaic kernels.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Tuple
+
+from repro.kernels.tuning import DEFAULT_TUNING, KernelTuning
+
+#: Per-kernel sweep grids.  ``quick`` is the CI-smoke subset (2 points
+#: per kernel — enough to exercise the sweep/caching machinery and emit
+#: artifact rows without stalling the job); ``full`` is the local grid.
+TILE_GRIDS: Dict[str, Dict[str, tuple]] = {
+    "fused_linear": {
+        "quick": ((64, 64, 64), (128, 128, 128)),
+        "full": ((64, 64, 64), (64, 128, 128), (128, 128, 128),
+                 (128, 256, 128), (256, 128, 128)),
+    },
+    "int8_matmul": {
+        "quick": ((64, 64, 64), (128, 128, 128)),
+        "full": ((64, 64, 64), (64, 128, 128), (128, 128, 128),
+                 (128, 256, 128), (256, 128, 128)),
+    },
+    "grouped_transfer": {
+        "quick": (32, 64),
+        "full": (16, 32, 64, 128),
+    },
+    "fps": {
+        "quick": (256, 512),
+        "full": (128, 256, 512, 1024),
+    },
+    "knn": {
+        "quick": (64, 128),
+        "full": (32, 64, 128, 256),
+    },
+    "flash_attention": {
+        "quick": ((64, 64), (128, 128)),
+        "full": ((64, 64), (64, 128), (128, 128), (128, 256)),
+    },
+}
+
+#: Sweep cache: (kernel, shape, dtype, platform) -> list of
+#: (tile, us_per_call) rows, best first.  Module-level on purpose — a
+#: plan search sweeps each distinct stage geometry once per process.
+_CACHE: Dict[Tuple, List[Tuple]] = {}
+
+
+def clear_cache() -> None:
+    _CACHE.clear()
+
+
+def cache_key(kernel: str, shape: tuple, dtype: str) -> Tuple:
+    import jax
+    return (kernel, tuple(shape), str(dtype), jax.default_backend())
+
+
+def _time_call(fn, iters: int) -> float:
+    """Median-of-iters wall time in µs (one untimed warmup call)."""
+    import jax
+    jax.block_until_ready(fn())
+    times = []
+    for _ in range(max(iters, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def _make_call(kernel: str, shape: tuple, dtype: str, tile,
+               interpret: Optional[bool]):
+    """A zero-arg timed closure running ``kernel`` at ``shape`` with
+    ``tile``.  Inputs are built once, outside the timed region."""
+    import jax
+    import jax.numpy as jnp
+
+    key = jax.random.PRNGKey(0)
+    if kernel == "fused_linear":
+        m, kk, n = shape
+        x = jax.random.normal(key, (m, kk), dtype=dtype)
+        w = jax.random.normal(key, (kk, n), dtype=dtype) * 0.05
+        b = jnp.zeros((n,), dtype)
+        tm, tk, tn = tile
+        from repro.kernels.fused_linear import fused_linear_pallas
+        return lambda: fused_linear_pallas(x, w, b, activation="relu",
+                                           tm=tm, tk=tk, tn=tn,
+                                           interpret=interpret)
+    if kernel == "int8_matmul":
+        m, kk, n = shape
+        xq = jax.random.randint(key, (m, kk), -128, 128, jnp.int8)
+        wq = jax.random.randint(key, (kk, n), -128, 128, jnp.int8)
+        sc = jnp.full((1, n), 0.01, jnp.float32)
+        tm, tk, tn = tile
+        from repro.kernels.int8_matmul import int8_matmul_pallas
+        return lambda: int8_matmul_pallas(xq, wq, sc, tm=tm, tk=tk, tn=tn,
+                                          interpret=interpret)
+    if kernel == "grouped_transfer":
+        n, s, k, c = shape
+        feats = jax.random.normal(key, (n, c), dtype=dtype)
+        nidx = jax.random.randint(key, (s, k), 0, n, jnp.int32)
+        cen = jax.random.normal(key, (s, c), dtype=dtype)
+        alpha = jnp.ones((1, c), dtype)
+        beta = jnp.zeros((1, c), dtype)
+        w = jax.random.normal(key, (2 * c, c), dtype=dtype) * 0.05
+        b = jnp.zeros((1, c), dtype)
+        from repro.kernels.grouped_transfer import grouped_transfer_pallas
+        return lambda: grouped_transfer_pallas(
+            feats, nidx, cen, None, alpha, beta, w, b, k=k,
+            normalize=True, affine=True, act=True, tile_s=tile,
+            interpret=interpret)
+    if kernel == "fps":
+        n, n_samples = shape
+        pts = jax.random.normal(key, (n, 3), dtype=dtype)
+        from repro.kernels.fps import fps_pallas
+        return lambda: fps_pallas(pts, n_samples, interpret=interpret,
+                                  tile_n=tile)
+    if kernel == "knn":
+        s, n, k = shape
+        smp = jax.random.normal(key, (s, 3), dtype=dtype)
+        pts = jax.random.normal(key, (n, 3), dtype=dtype)
+        from repro.kernels.knn import knn_pallas
+        return lambda: knn_pallas(smp, pts, k, tile_s=tile,
+                                  interpret=interpret)
+    if kernel == "flash_attention":
+        h, t, d = shape
+        q = jax.random.normal(key, (1, h, t, d), dtype=dtype)
+        kv = jax.random.normal(key, (1, max(h // 4, 1), t, d), dtype=dtype)
+        tq, tk = tile
+        from repro.kernels.flash_attention import flash_attention_pallas
+        return lambda: flash_attention_pallas(q, kv, kv, causal=True,
+                                              tq=tq, tk=tk,
+                                              interpret=interpret)
+    raise KeyError(f"unknown tunable kernel {kernel!r}; known: "
+                   f"{', '.join(sorted(TILE_GRIDS))}")
+
+
+def sweep(kernel: str, shape: tuple, *, dtype: str = "float32",
+          grid: Optional[tuple] = None, quick: bool = False,
+          iters: int = 2, interpret: Optional[bool] = None
+          ) -> List[Tuple]:
+    """Timed tile sweep for one kernel at one shape.
+
+    Returns ``[(tile, us_per_call), ...]`` sorted fastest-first, served
+    from the module cache on a repeat ``(kernel, shape, dtype,
+    platform)``.  ``grid`` overrides the builtin grid; ``quick``
+    selects the 2-point CI grid.  A tile whose call *raises* (a shape a
+    tile cannot lower) is skipped, not fatal; an empty sweep raises.
+    """
+    if kernel not in TILE_GRIDS:
+        raise KeyError(f"unknown tunable kernel {kernel!r}; known: "
+                       f"{', '.join(sorted(TILE_GRIDS))}")
+    key = cache_key(kernel, shape, dtype)
+    if key in _CACHE:
+        return _CACHE[key]
+    tiles = grid if grid is not None else \
+        TILE_GRIDS[kernel]["quick" if quick else "full"]
+    table: List[Tuple] = []
+    errs = []
+    for tile in tiles:
+        try:
+            fn = _make_call(kernel, shape, dtype, tile, interpret)
+            table.append((tile, _time_call(fn, iters)))
+        except KeyError:
+            raise
+        except Exception as e:  # noqa: BLE001 — a tile that cannot
+            errs.append(f"{tile}: {type(e).__name__}: {e}")  # lower is
+            continue                                         # a skip
+    if not table:
+        raise ValueError(
+            f"tile sweep for {kernel} at shape {shape} produced no "
+            f"timing: every tile failed ({'; '.join(errs)})")
+    table.sort(key=lambda r: (r[1], str(r[0])))
+    _CACHE[key] = table
+    return table
+
+
+def best_tile(kernel: str, shape: tuple, **kw):
+    """The fastest tile from :func:`sweep` (cached)."""
+    return sweep(kernel, shape, **kw)[0][0]
+
+
+def plan_shapes(spec) -> Dict[str, tuple]:
+    """The shapes each tunable kernel actually runs at under ``spec``,
+    derived the same way ``lower()``'s ops see them.  The matmul
+    kernels sweep at the FLOP-heaviest transfer layer (that is where
+    tile waste costs the most); the mapping kernels at stage 1 (the
+    widest gather).  ``flash_attention`` has no site in the point
+    pipeline and is omitted."""
+    cfg = spec.to_model_config()
+    dims = [cfg.embed_dim] + list(cfg.stage_dims)
+    k = cfg.k_neighbors
+    # FLOP-heaviest transfer: max over stages of smp*k * 2c_prev * c.
+    s_best = max(range(len(cfg.stage_dims)),
+                 key=lambda s: (cfg.stage_samples[s] * k
+                                * 2 * dims[s] * dims[s + 1]))
+    mm_shape = (cfg.stage_samples[s_best] * k, 2 * dims[s_best],
+                dims[s_best + 1])
+    return {
+        "fused_linear": mm_shape,
+        "int8_matmul": mm_shape,
+        "grouped_transfer": (cfg.n_points, cfg.stage_samples[0], k,
+                             cfg.embed_dim),
+        "fps": (cfg.n_points, cfg.stage_samples[0]),
+        "knn": (cfg.stage_samples[0], cfg.n_points, k),
+    }
+
+
+def plan_tuning(spec, *, quick: bool = False, iters: int = 2,
+                interpret: Optional[bool] = None) -> KernelTuning:
+    """Measured-best :class:`KernelTuning` for ``spec``: one sweep per
+    tunable kernel at the plan's shapes (cached), defaults for kernels
+    without a pipeline site (flash_attention)."""
+    shapes = plan_shapes(spec)
+    kw = dict(quick=quick, iters=iters, interpret=interpret)
+    return KernelTuning(
+        fused_linear=best_tile("fused_linear", shapes["fused_linear"], **kw),
+        int8_matmul=best_tile("int8_matmul", shapes["int8_matmul"], **kw),
+        grouped_transfer=best_tile("grouped_transfer",
+                                   shapes["grouped_transfer"], **kw),
+        fps=best_tile("fps", shapes["fps"], **kw),
+        knn=best_tile("knn", shapes["knn"], **kw),
+    )
+
+
+def tuning_candidates(quick: bool = True) -> Tuple[KernelTuning, ...]:
+    """A static :class:`KernelTuning` candidate set for
+    ``enumerate_plan_space(..., kernel_tunings=...)`` — no timing, the
+    roofline estimate ranks them via its tile-padding-waste term."""
+    small = KernelTuning(fused_linear=(64, 64, 64),
+                         int8_matmul=(64, 64, 64),
+                         grouped_transfer=32, fps=256, knn=64)
+    if quick:
+        return (DEFAULT_TUNING, small)
+    return (DEFAULT_TUNING, small,
+            KernelTuning(fused_linear=(256, 128, 128),
+                         int8_matmul=(256, 128, 128),
+                         grouped_transfer=128, fps=1024, knn=256))

@@ -10,9 +10,9 @@ observationally invisible until a per-stage override or the fused
 grouped-transfer path is opted into.
 
 Lowering: op-sequence shape, per-stage precision/backend override
-resolution (including the selective int8 export), invalid-override
-``ValueError``/``KeyError``s, and the ``RPA101``-coded fallback warning
-(escalated to an error in-tree by the pyproject gate).
+resolution (including the selective int8 export and the int8-Pallas
+matmul routing for int8 x pallas stages), and invalid-override
+``ValueError``/``KeyError``s.
 """
 import jax
 import jax.numpy as jnp
@@ -230,7 +230,13 @@ class TestLowering:
         plan = SP.lower(spec, spec.to_model_config())
         fns = {op.stage: op.fn for op in plan.cbr_ops()
                if op.stage is not None}
-        assert fns[2] is R.BACKENDS.get("pallas_interpret")
+        # Pallas entries get the spec's tiles bound at lowering time;
+        # the underlying backend fn is still the registered one.
+        from repro.kernels.tuning import DEFAULT_TUNING
+        base = R.BACKENDS.get("pallas_interpret")
+        assert fns[2].func is base.func
+        assert fns[2].keywords["interpret"] is True
+        assert fns[2].keywords["tiles"] == DEFAULT_TUNING.fused_linear
         assert fns[0] is R.BACKENDS.get("ref")
         assert plan.stage_backend == ("ref", "ref", "pallas_interpret",
                                       "ref")
@@ -308,15 +314,24 @@ class TestInvalidOverrides:
         with pytest.raises(ValueError, match="fuse"):
             build(spec, params)
 
-    def test_int8_stage_with_pallas_backend_warns(self):
-        """The soft misconfiguration: a pallas backend entry cannot
-        lower int8 export trees, so the stage silently falls back —
-        lowering says so with the in-tree-escalated RPA101 code."""
+    def test_int8_stage_with_pallas_backend_lowers_to_int8_pallas(self):
+        """int8 x pallas is a first-class lowering now (RPA101
+        retired): the stage's quant config routes the matmuls to the
+        int8 Pallas kernel, tiles bound from the spec's tuning."""
+        import warnings as W
+
+        from repro.kernels.tuning import DEFAULT_TUNING
         spec = tiny_spec(precision="int8",
                          stage_backend=("ref", "ref", "pallas_interpret",
                                         "ref"))
-        with pytest.warns(UserWarning, match="RPA101"):
-            SP.lower(spec, spec.to_model_config())
+        with W.catch_warnings():
+            W.simplefilter("error")          # no fallback warning left
+            plan = SP.lower(spec, spec.to_model_config())
+        quants = {op.stage: op.quant for op in plan.cbr_ops()
+                  if op.stage is not None}
+        assert quants[2].backend == "int8_pallas"
+        assert quants[2].tiles == DEFAULT_TUNING.int8_matmul
+        assert quants[0].backend == "int8_ref"
 
 
 # ------------------------------------------------------------------ #

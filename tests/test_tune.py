@@ -113,14 +113,16 @@ class TestSearchSpace:
             fused_groups=("none", "grouped_transfer", "no-such-kernel"))
         assert specs, "space unexpectedly empty"
         for s in specs:
-            # fused requires an all-fp32 ladder; int8 stages never pair
-            # with a pallas backend (the warn-and-fall-back trap)
+            # fused requires an all-fp32 ladder
             if s.fused_group != "none":
                 assert set(s.stage_precision) == {"fp32"}
-            assert not any(
-                p == "int8" and b.startswith("pallas")
-                for p, b in zip(s.stage_precision, s.stage_backend))
             lower(s, s.to_model_config())    # must not raise
+        # int8 x pallas is a first-class combo (int8_pallas matmul), so
+        # the space keeps it rather than pruning the old fall-back trap
+        assert any(
+            p == "int8" and b.startswith("pallas")
+            for s in specs
+            for p, b in zip(s.stage_precision, s.stage_backend))
 
     def test_non_knn_grouper_cannot_fuse(self):
         specs = enumerate_plan_space(
